@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: datasets, retrieval, significance marking."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+from repro.core.metrics import evaluate_run, mean_metrics, wilcoxon_significant
+from repro.data.synthetic import make_dataset
+
+ENCODERS = ("tasb", "contriever", "ance")
+QUERY_SETS = ("dl19", "dl20", "dlhard", "devsmall", "covid")
+CUTOFFS = (0.25, 0.50, 0.75)
+METRICS = ("AP", "MRR@10", "nDCG@10")
+
+# benchmark scale (paper: 8.8M docs, d=768; container: CPU-sized but the
+# same d and protocol)
+N_DOCS = 20000
+DIM = 768
+
+
+def retrieve(D, Q, k=1000):
+    _, ids = DenseIndex.build(D).search(jnp.asarray(Q), k=min(k, D.shape[0]))
+    ids = np.asarray(ids)
+    return {i: ids[i].tolist() for i in range(ids.shape[0])}
+
+
+def eval_system(D, queries, qrels, pruner=None):
+    """Per-query metric vectors for one system over all query sets."""
+    out = {}
+    Dx = pruner.prune_index(D) if pruner else D
+    for qs, Q in queries.items():
+        Qx = pruner.transform_queries(jnp.asarray(Q)) if pruner else jnp.asarray(Q)
+        run = retrieve(Dx, Qx)
+        out[qs] = evaluate_run(run, qrels[qs], metrics=METRICS)
+    return out
+
+
+def fmt_cell(val: float, sig: bool) -> str:
+    return f"{val:.4f}{'†' if sig else ' '}"
+
+
+def load_all_datasets(n_docs=N_DOCS, d=DIM, seed=0):
+    return {enc: make_dataset(enc, n_docs=n_docs, d=d, seed=seed,
+                              query_sets=QUERY_SETS)
+            for enc in ENCODERS}
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

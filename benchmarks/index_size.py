@@ -1,0 +1,40 @@
+"""Index space-occupancy table: O(mn + md) vs O(dn) (paper §2)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+
+N_DOCS = 50_000
+DIM = 768
+
+
+def run(emit=print) -> dict:
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(rng.standard_normal((N_DOCS, DIM)), jnp.float32)
+    full = DenseIndex.build(D)
+    emit(f"index_full,0,bytes={full.nbytes} dims={DIM}")
+    out = {"full": full.nbytes}
+    for c in (0.25, 0.5, 0.75):
+        pr = StaticPruner(cutoff=c).fit(D)
+        m = pr.kept_dims
+        idx = DenseIndex.build(pr.prune_index(D))
+        w_bytes = m * DIM * 4     # W_m transform matrix (O(md))
+        total = idx.nbytes + w_bytes
+        emit(f"index_pca_c{int(c*100)},0,bytes={total} "
+             f"ratio={total/full.nbytes:.3f} predicted={m/DIM:.3f}")
+        out[c] = total
+        idx8 = pr.build_index(D, quantize_int8=True)
+        emit(f"index_pca_c{int(c*100)}_int8,0,bytes={idx8.nbytes + w_bytes} "
+             f"ratio={(idx8.nbytes + w_bytes)/full.nbytes:.3f}")
+        out[f"{c}_int8"] = idx8.nbytes + w_bytes
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

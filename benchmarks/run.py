@@ -1,0 +1,65 @@
+"""Benchmark orchestrator — one section per paper table/figure + perf.
+
+Prints ``name,us_per_call,derived`` CSV rows (perf benches) and the
+markdown tables reproducing the paper's Tables 1-2 / Figures 1-2.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig2] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,fig1,fig2,perf,size")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI-sized)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import benchmarks.common as common
+    if args.fast:
+        common.N_DOCS = 4000
+        common.DIM = 256
+
+    t0 = time.time()
+    datasets = None
+
+    def need(name):
+        return only is None or name in only
+
+    if need("table1") or need("table2") or need("fig1") or need("fig2"):
+        print(f"# building {3} corpora (n={common.N_DOCS}, d={common.DIM})",
+              flush=True)
+        datasets = common.load_all_datasets(common.N_DOCS, common.DIM)
+
+    if need("table1"):
+        from benchmarks.table1_indomain import run as t1
+        t1(datasets)
+    if need("table2"):
+        from benchmarks.table2_ood import run as t2
+        t2(datasets)
+    if need("fig1"):
+        from benchmarks.fig1_cutoff import run as f1
+        f1(datasets)
+    if need("fig2"):
+        from benchmarks.fig2_nembed import run as f2
+        f2(datasets)
+    if need("perf"):
+        print("\n### Perf — name,us_per_call,derived")
+        from benchmarks.perf_qps import run as pq
+        pq()
+    if need("size"):
+        print("\n### Index size — name,us_per_call,derived")
+        from benchmarks.index_size import run as isz
+        isz()
+
+    print(f"\n# benchmarks done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Table 1 — In-domain PCA pruning at cutoffs {25, 50, 75}%.
+
+Three encoder spectra × five query sets × {AP, MRR@10, nDCG@10}, with a
+two-tailed paired Wilcoxon signed-rank test vs the unpruned baseline
+(† = significant at α=0.05), exactly the paper's protocol. PCA is fit on
+min(10^5, corpus) in-domain embeddings.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import (CUTOFFS, METRICS, QUERY_SETS, eval_system,
+                               fmt_cell, load_all_datasets)
+from repro.core import StaticPruner
+from repro.core.metrics import mean_metrics, wilcoxon_significant
+
+
+def run(datasets=None, emit=print) -> dict:
+    datasets = datasets or load_all_datasets()
+    results = {}
+    for enc, ds in datasets.items():
+        D = jnp.asarray(ds.docs)
+        base = eval_system(D, ds.queries, ds.qrels)
+        rows = {"baseline": base}
+        for c in CUTOFFS:
+            pruner = StaticPruner(cutoff=c).fit(D)
+            rows[c] = eval_system(D, ds.queries, ds.qrels, pruner)
+        results[enc] = rows
+
+        emit(f"\n### Table 1 — {enc} (in-domain PCA)")
+        hdr = "| c (%) | " + " | ".join(
+            f"{qs}:{m}" for qs in QUERY_SETS for m in METRICS) + " |"
+        emit(hdr)
+        emit("|" + "---|" * (len(QUERY_SETS) * len(METRICS) + 1))
+        for label, row in rows.items():
+            cells = []
+            for qs in QUERY_SETS:
+                for m in METRICS:
+                    v = float(row[qs][m].mean())
+                    if label == "baseline":
+                        cells.append(f"{v:.4f} ")
+                    else:
+                        sig, _ = wilcoxon_significant(base[qs][m], row[qs][m])
+                        cells.append(fmt_cell(v, sig))
+            name = "-" if label == "baseline" else f"{int(label*100)}"
+            emit(f"| {name} | " + " | ".join(cells) + " |")
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table 2 — Out-of-domain PCA: W_m fit on a different corpus (paper RQ2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (CUTOFFS, METRICS, QUERY_SETS, eval_system,
+                               fmt_cell, load_all_datasets, N_DOCS, DIM)
+from repro.core import StaticPruner
+from repro.core.metrics import wilcoxon_significant
+from repro.data.synthetic import make_ood_corpus
+
+
+def run(datasets=None, emit=print) -> dict:
+    datasets = datasets or load_all_datasets()
+    results = {}
+    for enc, ds in datasets.items():
+        D = jnp.asarray(ds.docs)
+        ood = jnp.asarray(make_ood_corpus(enc, n_docs=N_DOCS, d=DIM))
+        base = eval_system(D, ds.queries, ds.qrels)
+        rows = {"baseline": base}
+        for c in CUTOFFS:
+            pruner = StaticPruner(cutoff=c).fit(ood)   # fit OUT of domain
+            rows[c] = eval_system(D, ds.queries, ds.qrels, pruner)
+        results[enc] = rows
+
+        emit(f"\n### Table 2 — {enc} (out-of-domain PCA)")
+        hdr = "| c (%) | " + " | ".join(
+            f"{qs}:{m}" for qs in QUERY_SETS for m in METRICS) + " |"
+        emit(hdr)
+        emit("|" + "---|" * (len(QUERY_SETS) * len(METRICS) + 1))
+        for label, row in rows.items():
+            cells = []
+            for qs in QUERY_SETS:
+                for m in METRICS:
+                    v = float(row[qs][m].mean())
+                    if label == "baseline":
+                        cells.append(f"{v:.4f} ")
+                    else:
+                        sig, _ = wilcoxon_significant(base[qs][m], row[qs][m])
+                        cells.append(fmt_cell(v, sig))
+            name = "-" if label == "baseline" else f"{int(label*100)}"
+            emit(f"| {name} | " + " | ".join(cells) + " |")
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

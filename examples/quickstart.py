@@ -1,0 +1,38 @@
+"""Quickstart: PCA static pruning in ~30 lines (paper §2, end to end).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+from repro.core.metrics import evaluate_run, mean_metrics
+from repro.data.synthetic import make_dataset
+
+# 1. a corpus of document embeddings (stand-in for an encoded MS MARCO)
+ds = make_dataset("tasb", n_docs=10000, d=768, query_sets=("dl19",))
+D = jnp.asarray(ds.docs)
+Q = jnp.asarray(ds.queries["dl19"])
+
+# 2. OFFLINE: fit PCA on the index, keep 50% of dims, build the pruned index
+pruner = StaticPruner(cutoff=0.5).fit(D)          # D^T D = W Λ W^T
+index = DenseIndex.build(pruner.prune_index(D))   # D̂ = D W_m
+print(f"index: {D.shape[1]} -> {pruner.kept_dims} dims, "
+      f"{D.nbytes/2**20:.1f} -> {index.nbytes/2**20:.1f} MiB")
+
+# 3. ONLINE: transform queries (O(dm)) and search the pruned index (O(mn))
+q_hat = pruner.transform_queries(Q)               # q̂ = W_m^T q
+scores, ids = index.search(q_hat, k=10)
+
+# 4. effectiveness vs the unpruned baseline
+run = {i: np.asarray(ids)[i].tolist() for i in range(Q.shape[0])}
+pruned = mean_metrics(evaluate_run(run, ds.qrels["dl19"]))
+
+_, ids0 = DenseIndex.build(D).search(Q, k=10)
+run0 = {i: np.asarray(ids0)[i].tolist() for i in range(Q.shape[0])}
+base = mean_metrics(evaluate_run(run0, ds.qrels["dl19"]))
+
+for m in ("nDCG@10", "MRR@10", "AP"):
+    delta = 100 * (pruned[m] - base[m]) / max(base[m], 1e-9)
+    print(f"{m:8s} baseline {base[m]:.4f} | 50%-pruned {pruned[m]:.4f} "
+          f"({delta:+.1f}%)")

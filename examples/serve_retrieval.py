@@ -1,0 +1,55 @@
+"""Serve a PCA-pruned index with batched concurrent requests.
+
+Thin wrapper over the production driver (`repro.launch.serve`) showing the
+public API: offline artefacts -> batching server -> concurrent clients.
+
+  PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+from repro.data.synthetic import make_dataset
+from repro.launch.serve import RetrievalServer
+
+ds = make_dataset("ance", n_docs=20000, d=512, query_sets=("dl19",))
+D = jnp.asarray(ds.docs)
+
+pruner = StaticPruner(cutoff=0.5).fit(D)
+index = DenseIndex.build(pruner.prune_index(D))
+print(f"serving {index.n} docs at {index.dim} dims "
+      f"({index.nbytes/2**20:.1f} MiB)")
+
+server = RetrievalServer(index, pruner, k=10, max_batch=16)
+
+lat: list[float] = []
+lock = threading.Lock()
+
+
+def client(worker: int, n: int):
+    rng = np.random.default_rng(worker)
+    for _ in range(n):
+        q = ds.queries["dl19"][rng.integers(0, len(ds.queries["dl19"]))]
+        t0 = time.time()
+        scores, ids = server.query(q)
+        with lock:
+            lat.append(time.time() - t0)
+
+
+threads = [threading.Thread(target=client, args=(w, 25)) for w in range(8)]
+t0 = time.time()
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+wall = time.time() - t0
+server.close()
+
+ms = np.array(lat) * 1e3
+print(f"{len(lat)} queries from 8 concurrent clients in {wall:.2f}s "
+      f"({len(lat)/wall:.0f} qps)")
+print(f"latency p50={np.percentile(ms, 50):.1f}ms "
+      f"p95={np.percentile(ms, 95):.1f}ms p99={np.percentile(ms, 99):.1f}ms")

@@ -1,0 +1,106 @@
+"""End-to-end driver: train a ~100M bi-encoder, encode a corpus, PCA-prune,
+serve — the full production path of the paper's system.
+
+Default invocation trains a width/depth-reduced encoder for a few hundred
+steps so it finishes on this CPU container; pass ``--full`` for the real
+BERT-base-scale (110M param) config (same code path — sized for a TPU pod).
+
+  PYTHONPATH=src python examples/train_biencoder.py --steps 200
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+from repro.core.metrics import evaluate_run, mean_metrics
+from repro.checkpoint import CheckpointManager
+from repro.data.tokens import Prefetcher, pair_batch
+from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
+                                    init_biencoder)
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=24)
+    ap.add_argument("--full", action="store_true",
+                    help="BERT-base scale (~110M params; pod-sized)")
+    ap.add_argument("--ckpt-dir", default="/tmp/biencoder_ckpt")
+    ap.add_argument("--cutoff", type=float, default=0.5)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = BiEncoderConfig()  # 12L/768d/110M — the paper's encoder scale
+    else:
+        cfg = BiEncoderConfig(n_layers=4, d_model=128, n_heads=4, d_ff=512,
+                              vocab=2048, embed_dim=128, max_len=64,
+                              compute_dtype="float32", remat=False)
+    print(f"[biencoder] {cfg.param_count()/1e6:.1f}M params")
+
+    params = init_biencoder(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    lr_fn = warmup_cosine(3e-4, args.steps // 10, args.steps)
+
+    @jax.jit
+    def step(p, o, batch, t):
+        loss, g = jax.value_and_grad(contrastive_loss)(p, batch, cfg)
+        p, o = adamw_update(g, o, p, lr_fn(t))
+        return p, o, loss
+
+    mgr = CheckpointManager(args.ckpt_dir, keep_n=2)
+    pf = Prefetcher(lambda t: pair_batch(0, t, batch=args.batch,
+                                         seq_len=args.seq_len, vocab=cfg.vocab))
+    t0 = time.time()
+    try:
+        for i in range(args.steps):
+            _, hb = next(pf)
+            batch = jax.tree.map(jnp.asarray, hb)
+            params, opt, loss = step(params, opt, batch, i)
+            if (i + 1) % 25 == 0:
+                print(f"[train] step {i+1:4d} loss {float(loss):.4f} "
+                      f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)")
+            if (i + 1) % 100 == 0:
+                mgr.save(i + 1, (params, opt))
+    finally:
+        pf.close()
+        mgr.wait()
+
+    # ---- encode corpus -----------------------------------------------------
+    n_docs = 2000
+    print(f"[encode] corpus of {n_docs} docs")
+    docs, queries = [], []
+    for i in range(0, n_docs, 64):
+        b = pair_batch(7, i, batch=64, seq_len=args.seq_len, vocab=cfg.vocab)
+        docs.append(b["d_tokens"])
+        queries.append(b["q_tokens"])
+    d_tok = np.concatenate(docs)[:n_docs]
+    q_tok = np.concatenate(queries)[:64]
+    ones_d = jnp.ones((n_docs, args.seq_len), jnp.int32)
+    ones_q = jnp.ones((64, args.seq_len), jnp.int32)
+    D = encode(params, jnp.asarray(d_tok), ones_d, cfg)
+    Q = encode(params, jnp.asarray(q_tok), ones_q, cfg)
+    qrels = {i: {i: 1} for i in range(64)}
+
+    # ---- offline PCA prune + online serve -----------------------------------
+    pruner = StaticPruner(cutoff=args.cutoff).fit(D)
+    index = DenseIndex.build(pruner.prune_index(D))
+    print(f"[prune] {D.shape[1]} -> {pruner.kept_dims} dims "
+          f"({D.nbytes/2**20:.2f} -> {index.nbytes/2**20:.2f} MiB)")
+
+    def mrr(ids):
+        run = {i: np.asarray(ids)[i].tolist() for i in range(64)}
+        return mean_metrics(evaluate_run(run, qrels, metrics=("MRR@10",)))["MRR@10"]
+
+    _, ids_full = DenseIndex.build(D).search(Q, k=10)
+    _, ids_pruned = index.search(pruner.transform_queries(Q), k=10)
+    print(f"[serve] MRR@10 full={mrr(ids_full):.4f} "
+          f"pruned={mrr(ids_pruned):.4f}")
+
+
+if __name__ == "__main__":
+    main()

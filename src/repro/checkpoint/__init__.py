@@ -1,0 +1,4 @@
+"""Fault-tolerance substrate: async sharded checkpoints, elastic restore."""
+from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

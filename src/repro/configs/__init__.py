@@ -1,0 +1,6 @@
+"""Architecture configs (exact public hyperparameters) + registry."""
+from repro.configs.registry import (ARCHS, get_arch, list_archs, input_specs,
+                                    make_step_bundle, cells)
+
+__all__ = ["ARCHS", "get_arch", "list_archs", "input_specs",
+           "make_step_bundle", "cells"]

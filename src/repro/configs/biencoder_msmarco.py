@@ -1,0 +1,36 @@
+"""The paper's own encoder family: a BERT-base-scale bi-encoder (~110M).
+
+TAS-B / Contriever / ANCE are all 6-12-layer BERT-family bi-encoders with
+d=768 embeddings; this config is the trainable stand-in used by the
+end-to-end example (train -> encode -> PCA-prune -> serve). Not one of the
+10 graded dry-run architectures, but it IS wired into the registry so the
+same launcher drives it.
+"""
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.models.biencoder import BiEncoderConfig
+
+CFG = BiEncoderConfig(
+    name="biencoder-msmarco",
+    n_layers=12, d_model=768, n_heads=12, d_ff=3072, vocab=30522,
+    embed_dim=768, max_len=256, pooling="mean", temperature=0.05,
+)
+
+SHAPES = (
+    ShapeCell("train_pairs", "train", dict(seq_len=128, global_batch=4096)),
+    ShapeCell("encode_corpus", "serve", dict(seq_len=256, global_batch=8192)),
+)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="biencoder-msmarco", family="biencoder", cfg=CFG,
+        shapes=SHAPES,
+        source="paper (ANCE/TAS-B/Contriever stand-in)",
+        optimizer="adamw")
+
+
+def smoke_cfg() -> BiEncoderConfig:
+    return BiEncoderConfig(
+        name="biencoder-smoke", n_layers=2, d_model=64, n_heads=4, d_ff=128,
+        vocab=512, embed_dim=64, max_len=32, compute_dtype="float32",
+        remat=False)

@@ -1,0 +1,69 @@
+"""Architecture registry: ``--arch`` lookup, input specs, step bundles."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs import (arctic_480b, autoint, biencoder_msmarco, deepfm,
+                           dlrm_mlperf, graphcast, mixtral_8x7b,
+                           phi3_medium_14b, qwen2_1_5b, smollm_135m,
+                           two_tower_retrieval)
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.configs.steps import BUNDLE_BUILDERS, StepBundle
+
+_MODULES = {
+    "mixtral-8x7b": mixtral_8x7b,
+    "arctic-480b": arctic_480b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "phi3-medium-14b": phi3_medium_14b,
+    "smollm-135m": smollm_135m,
+    "graphcast": graphcast,
+    "dlrm-mlperf": dlrm_mlperf,
+    "autoint": autoint,
+    "deepfm": deepfm,
+    "two-tower-retrieval": two_tower_retrieval,
+    # the paper's own encoder (examples/launcher; not a graded cell)
+    "biencoder-msmarco": biencoder_msmarco,
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "biencoder-msmarco")
+
+
+def list_archs(include_extra: bool = False) -> tuple[str, ...]:
+    return tuple(_MODULES) if include_extra else ARCHS
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    try:
+        return _MODULES[arch_id].spec()
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+
+
+def get_smoke_cfg(arch_id: str):
+    return _MODULES[arch_id].smoke_cfg()
+
+
+def cells(include_skipped: bool = True) -> Iterator[tuple[ArchSpec, ShapeCell]]:
+    """Every (arch × shape) dry-run cell, in registry order."""
+    for arch_id in ARCHS:
+        spec = get_arch(arch_id)
+        for cell in spec.shapes:
+            if cell.skip_reason and not include_skipped:
+                continue
+            yield spec, cell
+
+
+def make_step_bundle(arch_id: str, shape: str, mesh: Mesh) -> StepBundle:
+    spec = get_arch(arch_id)
+    cell = spec.cell(shape)
+    if cell.skip_reason:
+        raise ValueError(f"{arch_id}:{shape} is skipped: {cell.skip_reason}")
+    return BUNDLE_BUILDERS[spec.family](spec, cell, mesh)
+
+
+def input_specs(arch_id: str, shape: str, mesh: Mesh) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    return make_step_bundle(arch_id, shape, mesh).args

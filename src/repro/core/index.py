@@ -1,0 +1,196 @@
+"""Dense embedding index with exact (brute-force) top-k search.
+
+This is the FAISS-flat role in the paper's pipeline, built TPU-native:
+
+  * ``DenseIndex``        — single-logical-array index, matmul + top-k.
+                            Backend 'jnp' (XLA) or 'pallas' (fused
+                            score-and-select scan; see repro.kernels).
+  * ``ShardedDenseIndex`` — rows sharded over every mesh device; each shard
+                            scans locally, then a tiny global merge over the
+                            per-shard top-k (k·chips candidates).
+  * int8 symmetric quantisation (beyond-paper) composes with PCA pruning:
+    index bytes drop by 4x on top of the m/d PCA reduction.
+
+Scores are always accumulated in fp32 regardless of index dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Backend = Literal["jnp", "pallas"]
+
+
+def _topk_merge(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k of (B, C) candidate scores, returning (B, k) scores + gathered ids."""
+    s, idx = jax.lax.top_k(scores, k)
+    return s, jnp.take_along_axis(ids, idx, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "block", "vma_axes"))
+def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
+               vma_axes: tuple[str, ...] | None = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Blocked exact search: stream row blocks of D, keep a running top-k.
+
+    Never materialises the full (B, n) score matrix — the jnp analogue of
+    the Pallas fused kernel, and the oracle it is tested against.
+    ``vma_axes``: when called inside shard_map over those axes, the scan
+    carry must be marked varying (jax.lax.pcast) to typecheck.
+    """
+    n, d = D.shape
+    B = Q.shape[0]
+    block = min(block, n)
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
+    blocks = Dp.reshape(nblocks, block, d)
+    Qf = Q.astype(jnp.float32)
+
+    def body(carry, inp):
+        bs, bi = carry
+        blk, start = inp
+        s = Qf @ blk.T.astype(jnp.float32)                       # (B, block)
+        ids = start + jnp.arange(block, dtype=jnp.int32)[None, :]
+        valid = ids < n
+        s = jnp.where(valid, s, -jnp.inf)
+        cs = jnp.concatenate([bs, s], axis=1)
+        ci = jnp.concatenate([bi, jnp.broadcast_to(ids, (B, block))], axis=1)
+        return _topk_merge(cs, ci, k), None
+
+    init = (jnp.full((B, k), -jnp.inf, jnp.float32), jnp.full((B, k), -1, jnp.int32))
+    if vma_axes:
+        init = jax.tree.map(
+            lambda x: jax.lax.pcast(x, vma_axes, to="varying"), init)
+    starts = jnp.arange(nblocks, dtype=jnp.int32) * block
+    (scores, ids), _ = jax.lax.scan(body, init, (blocks, starts))
+    return scores, ids
+
+
+@dataclasses.dataclass
+class DenseIndex:
+    """Flat exact-search index over document embeddings.
+
+    ``vectors``: (n, m) document matrix (possibly PCA-pruned and/or int8).
+    ``scale``:   per-dim dequant scale when vectors are int8, else None.
+    """
+
+    vectors: jax.Array
+    scale: jax.Array | None = None
+    backend: Backend = "jnp"
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        b = self.vectors.size * self.vectors.dtype.itemsize
+        if self.scale is not None:
+            b += self.scale.size * self.scale.dtype.itemsize
+        return b
+
+    @classmethod
+    def build(cls, vectors: jax.Array, *, dtype: jnp.dtype | None = None,
+              quantize_int8: bool = False, backend: Backend = "jnp") -> "DenseIndex":
+        v = jnp.asarray(vectors)
+        if quantize_int8:
+            from repro.core.quantization import quantize_int8_per_dim
+            q, scale = quantize_int8_per_dim(v)
+            return cls(vectors=q, scale=scale, backend=backend)
+        if dtype is not None:
+            v = v.astype(dtype)
+        return cls(vectors=v, scale=None, backend=backend)
+
+    def _dequeries(self, queries: jax.Array) -> jax.Array:
+        """Fold the int8 scale into the query side: (Dq) = (D_int8)(s ⊙ q)."""
+        q = jnp.atleast_2d(queries)
+        if self.scale is not None:
+            q = q * self.scale[None, :]
+        return q
+
+    def search(self, queries: jax.Array, k: int = 10,
+               block: int = 65536) -> tuple[jax.Array, jax.Array]:
+        """Exact top-k. Returns (scores (B,k) fp32, ids (B,k) int32)."""
+        q = self._dequeries(queries)
+        k = min(k, self.n)
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            return kops.topk_score(self.vectors, q, k=k)
+        return _scan_topk(self.vectors, q, k, block=block)
+
+
+@dataclasses.dataclass
+class ShardedDenseIndex:
+    """Index with rows sharded across every device of a mesh.
+
+    Serve-time layout of the paper's index at pod scale: each chip owns
+    n/num_devices contiguous rows. Search = local blocked scan per shard
+    followed by a global merge of per-shard top-k — the only collective is
+    an all-gather of (B, k) scores + ids per shard (k·chips ≪ n).
+    """
+
+    vectors: jax.Array          # (n, m) sharded P(axes, None)
+    mesh: Mesh
+    scale: jax.Array | None = None
+
+    @classmethod
+    def build(cls, vectors: jax.Array, mesh: Mesh, *,
+              quantize_int8: bool = False) -> "ShardedDenseIndex":
+        axes = tuple(mesh.axis_names)
+        scale = None
+        v = jnp.asarray(vectors)
+        if quantize_int8:
+            from repro.core.quantization import quantize_int8_per_dim
+            v, scale = quantize_int8_per_dim(v)
+        sharding = NamedSharding(mesh, P(axes, None))
+        n = v.shape[0]
+        ndev = int(np.prod(mesh.devices.shape))
+        pad = (-n) % ndev
+        if pad:
+            v = jnp.pad(v, ((0, pad), (0, 0)))
+        v = jax.device_put(v, sharding)
+        return cls(vectors=v, mesh=mesh, scale=scale)
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    def search(self, queries: jax.Array, k: int = 10) -> tuple[jax.Array, jax.Array]:
+        axes = tuple(self.mesh.axis_names)
+        q = jnp.atleast_2d(queries).astype(jnp.float32)
+        if self.scale is not None:
+            q = q * self.scale[None, :]
+        k = min(k, self.n)
+        n = self.n
+        ndev = int(np.prod(self.mesh.devices.shape))
+        rows_per = n // ndev
+
+        def shard_fn(D_local, q_rep):
+            # Which shard am I? Flat linear index over mesh axes.
+            idx = jax.lax.axis_index(axes)
+            base = idx * rows_per
+            s, ids = _scan_topk(D_local, q_rep, k, vma_axes=axes)
+            ids = jnp.where(ids >= 0, ids + base, -1)
+            # Gather every shard's candidates and merge.
+            s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)      # (B, k*ndev)
+            i_all = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
+            return _topk_merge(s_all, i_all, k)
+
+        # merged result is replicated by construction; not statically provable
+        fn = jax.shard_map(shard_fn, mesh=self.mesh,
+                           in_specs=(P(axes, None), P(None, None)),
+                           out_specs=(P(None, None), P(None, None)),
+                           check_vma=False)
+        return jax.jit(fn)(self.vectors, q)

@@ -1,0 +1,86 @@
+"""Index maintenance: incremental updates + PCA drift monitoring.
+
+Beyond-paper production plumbing for the pruned index. The paper shows the
+transform is robust out-of-domain (RQ2) and to small fit samples (RQ3) —
+this module turns those findings into operational policy:
+
+  * ``IndexUpdater.add_documents`` — new documents are rotated with the
+    EXISTING ``W_m`` and appended (no refit, no reindex of old docs): the
+    offline artefact stays valid as the corpus grows.
+  * ``drift_score`` — fraction of new-batch embedding energy captured by
+    the kept subspace, ``||X W_m||² / ||X||²``, compared to the energy the
+    subspace captured at fit time. A ratio near 1 ⇒ the rotation still
+    fits (paper RQ2 regime); a falling ratio quantifies when the corpus
+    distribution has moved enough to warrant an offline refit.
+  * ``needs_refit`` — thresholded policy hook for the serving controller.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import DenseIndex
+from repro.core.pruning import StaticPruner
+
+
+def captured_energy(X: jax.Array, pruner: StaticPruner) -> float:
+    """||X W_m||^2 / ||X||^2 — energy the kept subspace explains on X."""
+    W = pruner.state.components[:, :pruner.kept_dims]
+    Xf = X.astype(jnp.float32)
+    num = jnp.sum((Xf @ W) ** 2)
+    den = jnp.maximum(jnp.sum(Xf ** 2), 1e-30)
+    return float(num / den)
+
+
+@dataclasses.dataclass
+class IndexUpdater:
+    """Pruned index + transform with incremental growth and drift tracking."""
+
+    pruner: StaticPruner
+    index: DenseIndex
+    fit_energy: float = None  # energy on the fit corpus (reference point)
+
+    @classmethod
+    def build(cls, corpus: jax.Array, *, cutoff: float = 0.5,
+              quantize_int8: bool = False) -> "IndexUpdater":
+        pruner = StaticPruner(cutoff=cutoff).fit(corpus)
+        index = pruner.build_index(corpus, quantize_int8=quantize_int8)
+        return cls(pruner=pruner, index=index,
+                   fit_energy=captured_energy(corpus, pruner))
+
+    def add_documents(self, new_embs: jax.Array) -> None:
+        """Rotate with the existing W_m and append (no refit)."""
+        pruned = self.pruner.prune_index(new_embs)
+        if self.index.scale is not None:
+            q = jnp.clip(jnp.round(pruned / self.index.scale[None, :]),
+                         -127, 127).astype(jnp.int8)
+            vectors = jnp.concatenate([self.index.vectors, q], axis=0)
+        else:
+            vectors = jnp.concatenate(
+                [self.index.vectors, pruned.astype(self.index.vectors.dtype)],
+                axis=0)
+        self.index = DenseIndex(vectors=vectors, scale=self.index.scale,
+                                backend=self.index.backend)
+
+    def drift_score(self, new_embs: jax.Array) -> float:
+        """1.0 = no drift; < 1.0 = kept subspace explains less energy on the
+        new batch than it did on the fit corpus."""
+        return captured_energy(new_embs, self.pruner) / max(self.fit_energy,
+                                                            1e-12)
+
+    def needs_refit(self, new_embs: jax.Array, threshold: float = 0.9) -> bool:
+        return self.drift_score(new_embs) < threshold
+
+    def refit(self, corpus: jax.Array) -> None:
+        """Offline refit on the current corpus distribution."""
+        cutoff = self.pruner.effective_cutoff
+        quant = self.index.scale is not None
+        fresh = IndexUpdater.build(corpus, cutoff=cutoff,
+                                   quantize_int8=quant)
+        self.pruner, self.index, self.fit_energy = (fresh.pruner, fresh.index,
+                                                    fresh.fit_energy)
+
+    def search(self, queries: jax.Array, k: int = 10):
+        return self.index.search(self.pruner.transform_queries(queries), k=k)

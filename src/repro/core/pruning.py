@@ -1,0 +1,125 @@
+"""StaticPruner — the paper's offline pipeline as one high-level object.
+
+Usage (offline):
+    pruner = StaticPruner(cutoff=0.5)              # keep m = d/2 dims
+    pruner.fit(corpus_embeddings)                  # or .fit_streaming(...)
+    pruned_index = pruner.prune_index(corpus_embeddings)   # D̂ = D W_m
+    pruner.save("msmarco_pca.npz")
+
+Usage (online / query processing):
+    q_hat = pruner.transform_queries(q)            # q̂ = W_mᵀ q,  O(dm)
+    scores = pruned_index @ q_hat                  # O(mn)  — via DenseIndex
+
+Out-of-domain (paper RQ2): the same fitted pruner prunes a *different*
+corpus: ``pruner.prune_index(other_corpus)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import pca as _pca
+from repro.core.index import DenseIndex, ShardedDenseIndex
+
+
+@dataclasses.dataclass
+class StaticPruner:
+    """PCA-based static dimension pruning (query-independent, offline).
+
+    Exactly one of ``cutoff`` / ``m`` / ``variance_target`` picks the kept
+    dimensionality; ``center=False`` reproduces the paper's uncentered
+    Gram eigendecomposition.
+    """
+
+    cutoff: float | None = None
+    m: int | None = None
+    variance_target: float | None = None
+    center: bool = False
+    state: _pca.PCAState | None = None
+
+    def __post_init__(self):
+        picked = sum(x is not None for x in (self.cutoff, self.m, self.variance_target))
+        if picked != 1:
+            raise ValueError("specify exactly one of cutoff / m / variance_target")
+
+    # -- fit ---------------------------------------------------------------
+    def fit(self, D: jax.Array) -> "StaticPruner":
+        self.state = _pca.fit_pca(D, center=self.center)
+        return self
+
+    def fit_streaming(self, batches: Iterable[np.ndarray | jax.Array]) -> "StaticPruner":
+        self.state = _pca.fit_pca_streaming(batches, center=self.center)
+        return self
+
+    def fit_distributed(self, D: jax.Array, mesh: Mesh) -> "StaticPruner":
+        self.state = _pca.fit_pca_distributed(D, mesh, center=self.center)
+        return self
+
+    # -- dimensionality ------------------------------------------------------
+    @property
+    def kept_dims(self) -> int:
+        if self.state is None:
+            raise RuntimeError("fit() before querying kept_dims")
+        d = self.state.d
+        if self.m is not None:
+            return min(self.m, d)
+        if self.cutoff is not None:
+            return _pca.m_from_cutoff(d, self.cutoff)
+        return _pca.m_for_variance(self.state, self.variance_target)
+
+    @property
+    def effective_cutoff(self) -> float:
+        return _pca.cutoff_from_m(self.state.d, self.kept_dims)
+
+    # -- offline application -------------------------------------------------
+    def prune_index(self, D: jax.Array, *, block_rows: int = 262144) -> jax.Array:
+        """D̂ = D·W_m, computed in row blocks (out-of-core friendly)."""
+        self._check_fit()
+        m = self.kept_dims
+        n = D.shape[0]
+        if n <= block_rows:
+            return _pca.transform(D, self.state, m)
+        outs = [
+            _pca.transform(D[i:i + block_rows], self.state, m)
+            for i in range(0, n, block_rows)
+        ]
+        return jnp.concatenate(outs, axis=0)
+
+    def build_index(self, D: jax.Array, *, mesh: Mesh | None = None,
+                    quantize_int8: bool = False, backend: str = "jnp"):
+        """One-stop offline artefact: pruned (optionally int8) search index."""
+        pruned = self.prune_index(D)
+        if mesh is not None:
+            return ShardedDenseIndex.build(pruned, mesh, quantize_int8=quantize_int8)
+        return DenseIndex.build(pruned, quantize_int8=quantize_int8, backend=backend)
+
+    # -- online application ----------------------------------------------------
+    def transform_queries(self, q: jax.Array) -> jax.Array:
+        """q̂ = W_mᵀq — the only per-query cost the method adds: O(dm)."""
+        self._check_fit()
+        return _pca.transform_query(q, self.state, self.kept_dims)
+
+    # -- persistence ------------------------------------------------------------
+    def save(self, path: str) -> None:
+        self._check_fit()
+        _pca.save_pca(path, self.state)
+
+    @classmethod
+    def load(cls, path: str, *, cutoff: float | None = None, m: int | None = None,
+             variance_target: float | None = None) -> "StaticPruner":
+        if cutoff is None and m is None and variance_target is None:
+            cutoff = 0.5
+        state = _pca.load_pca(path)
+        obj = cls(cutoff=cutoff, m=m, variance_target=variance_target,
+                  center=state.centered)
+        obj.state = state
+        return obj
+
+    def _check_fit(self):
+        if self.state is None:
+            raise RuntimeError("StaticPruner is not fitted; call fit() first")

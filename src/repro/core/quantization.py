@@ -1,0 +1,32 @@
+"""Symmetric int8 quantisation for embedding indexes (beyond-paper).
+
+Per-dimension symmetric scaling composes cleanly with PCA pruning: after the
+rotation D̂ = D W_m each column has a well-defined dynamic range (variance =
+eigenvalue), so per-dim scales capture it tightly. Scoring folds the scale
+into the query side: (D_int8 · diag(s)) q = D_int8 · (s ⊙ q), so the index
+stays int8 end-to-end and dot products run int8×fp32→fp32 (TPU-friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8_per_dim(X: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-column int8. Returns (q (n,m) int8, scale (m,) fp32)."""
+    Xf = X.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(Xf), axis=0)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(Xf / scale[None, :]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[None, :]
+
+
+def quantization_error(X: jax.Array) -> jax.Array:
+    """Relative Frobenius reconstruction error of int8 round-trip."""
+    q, s = quantize_int8_per_dim(X)
+    err = dequantize_int8(q, s) - X.astype(jnp.float32)
+    return jnp.linalg.norm(err) / jnp.maximum(jnp.linalg.norm(X), 1e-12)

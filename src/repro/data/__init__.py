@@ -1,0 +1,1 @@
+"""Data substrate: synthetic corpora, token pipelines, graph sampling, recsys batches."""

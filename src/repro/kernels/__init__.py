@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  * ``gram``               — blocked D^T D accumulation (offline PCA fit)
+  * ``topk_score``         — fused score + running top-k index scan (serving)
+  * ``pca_project[_quant]``— blocked D·W_m index build (+ int8 epilogue)
+
+Validated against ``ref.py`` oracles in interpret mode (CPU container);
+compiled via Mosaic on real TPU backends.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

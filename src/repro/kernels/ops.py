@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the container is CPU-only; TPU is
+the compile target). On a real TPU backend the wrappers run the compiled
+Mosaic kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import gram_pallas
+from repro.kernels.pca_project import pca_project_pallas, pca_project_quant_pallas
+from repro.kernels.topk_score import topk_score_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(D: jax.Array, *, block_rows: int = 1024,
+         interpret: bool | None = None) -> jax.Array:
+    """Blocked ``D^T D`` (fp32)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return gram_pallas(D, block_rows=block_rows, interpret=interpret)
+
+
+def topk_score(D: jax.Array, Q: jax.Array, *, k: int, block_n: int = 1024,
+               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused score + top-k over a document index shard."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return topk_score_pallas(D, Q, k=k, block_n=block_n, interpret=interpret)
+
+
+def pca_project(D: jax.Array, W: jax.Array, *, block_rows: int = 1024,
+                interpret: bool | None = None) -> jax.Array:
+    """Blocked ``D @ W_m`` index build."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return pca_project_pallas(D, W, block_rows=block_rows, interpret=interpret)
+
+
+def pca_project_quant(D: jax.Array, W: jax.Array, scale: jax.Array, *,
+                      block_rows: int = 1024, interpret: bool | None = None
+                      ) -> jax.Array:
+    """Blocked ``D @ W_m`` with fused int8 quantisation epilogue."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return pca_project_quant_pallas(D, W, scale, block_rows=block_rows,
+                                    interpret=interpret)

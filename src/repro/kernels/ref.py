@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(D: jax.Array) -> jax.Array:
+    Df = D.astype(jnp.float32)
+    return Df.T @ Df
+
+
+def topk_score_ref(D: jax.Array, Q: jax.Array, *, k: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    s = Q.astype(jnp.float32) @ D.astype(jnp.float32).T      # (B, n)
+    scores, ids = jax.lax.top_k(s, k)
+    return scores, ids.astype(jnp.int32)
+
+
+def pca_project_ref(D: jax.Array, W: jax.Array) -> jax.Array:
+    return (D.astype(jnp.float32) @ W.astype(jnp.float32)).astype(D.dtype)
+
+
+def pca_project_quant_ref(D: jax.Array, W: jax.Array, scale: jax.Array) -> jax.Array:
+    t = D.astype(jnp.float32) @ W.astype(jnp.float32)
+    q = jnp.clip(jnp.round(t / jnp.maximum(scale[None, :], 1e-12)), -127, 127)
+    return q.astype(jnp.int8)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod AOT dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+512 placeholder host devices stand in for 2 TPU v5e pods; every step
+function is lowered with ShapeDtypeStruct inputs (no allocation) and
+compiled through the full SPMD partitioner. Sharding mismatches, OOM-scale
+layouts and unsupported collectives all fail here.
+
+Per cell the artifact JSON records:
+  * memory_analysis  — per-device argument/output/temp/peak bytes
+  * cost_analysis    — per-device HLO FLOPs + bytes accessed
+  * collectives      — per-device bytes by collective kind, parsed from the
+                       optimized HLO (the SPMD program is per-device)
+  * meta             — analytic MODEL_FLOPS, param counts, cell dims
+
+Usage:
+  python -m repro.launch.dryrun --all                      # every cell, both meshes
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute", "collective-broadcast")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes per collective kind from (optimized) HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        base = op.removesuffix("-start").removesuffix("-done")
+        if base in out:
+            out[base]["count"] += 1
+            out[base]["bytes"] += _shape_bytes(result_type)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
+             force: bool = False, keep_hlo: bool = False) -> dict:
+    from repro.configs.registry import get_arch, make_step_bundle
+    from repro.launch.mesh import make_production_mesh
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    spec = get_arch(arch)
+    cell = spec.cell(shape)
+    record = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "status": None, "timestamp": time.time()}
+    if cell.skip_reason:
+        record.update(status="skipped", reason=cell.skip_reason)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    t0 = time.time()
+    try:
+        with jax.default_device(jax.devices()[0]):
+            bundle = make_step_bundle(arch, shape, mesh)
+            with mesh:
+                lowered = bundle.lower()
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+
+        # global, trip-count-aware flops/bytes (cost_analysis counts scan
+        # bodies once — see launch/flops.py)
+        from repro.launch.flops import jaxpr_cost, hlo_collectives
+        with mesh:
+            acc = jaxpr_cost(bundle.fn, *bundle.args)
+
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes", "peak_memory_in_bytes"):
+            if hasattr(mem, attr):
+                mem_d[attr] = int(getattr(mem, attr))
+        cost = compiled.cost_analysis() or {}
+        cost_d = {k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and np.isfinite(float(v))
+                  and (k in ("flops", "bytes accessed", "optimal_seconds")
+                       or k.startswith("bytes accessed"))}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)          # naive (body-once) counts
+        coll_trips = hlo_collectives(hlo)      # while-trip-aware counts
+
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            n_devices=int(np.prod(mesh.devices.shape)),
+            memory=mem_d, cost=cost_d, collectives=coll,
+            collectives_trip_aware=coll_trips,
+            accounting={"global_flops": float(acc["flops"]),
+                        "global_bytes": float(acc["bytes"])},
+            meta={k: (int(v) if isinstance(v, (int, np.integer)) else v)
+                  for k, v in bundle.meta.items()},
+            hlo_lines=len(hlo.splitlines()),
+        )
+        if keep_hlo:
+            with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.registry import cells
+
+    if args.list:
+        for spec, cell in cells():
+            skip = f"  [SKIP: {cell.skip_reason}]" if cell.skip_reason else ""
+            print(f"{spec.arch_id:24s} {cell.name:16s} {cell.kind:14s}{skip}")
+        return
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        for spec, cell in cells():
+            for m in meshes:
+                todo.append((spec.arch_id, cell.name, m))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all / --list)")
+        todo = [(args.arch, args.shape, m) for m in meshes]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape, m in todo:
+        rec = run_cell(arch, shape, m, args.out, force=args.force,
+                       keep_hlo=args.keep_hlo)
+        status = rec["status"]
+        if status == "ok":
+            n_ok += 1
+            peak = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+            print(f"OK    {arch:24s} {shape:14s} {m:8s} "
+                  f"compile={rec['compile_s']:7.1f}s temp={peak:6.2f}GiB "
+                  f"coll={rec['collectives']['total_bytes']/2**20:9.1f}MiB "
+                  f"flops={rec['cost'].get('flops', 0):.3e}")
+        elif status == "skipped":
+            n_skip += 1
+            print(f"SKIP  {arch:24s} {shape:14s} {m:8s} {rec['reason'][:60]}")
+        else:
+            n_err += 1
+            print(f"ERROR {arch:24s} {shape:14s} {m:8s} {rec['error'][:120]}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

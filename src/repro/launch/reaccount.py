@@ -1,0 +1,51 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Refresh the jaxpr-based accounting fields of existing dry-run artifacts
+without recompiling (tracing only — seconds per cell instead of minutes).
+
+  PYTHONPATH=src python -m repro.launch.reaccount [--dir experiments/dryrun]
+"""
+import argparse
+import glob
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.registry import make_step_bundle
+    from repro.launch.flops import jaxpr_cost
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = {"pod": make_production_mesh(),
+              "multipod": make_production_mesh(multi_pod=True)}
+
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        mesh = meshes[rec["mesh"]]
+        try:
+            bundle = make_step_bundle(rec["arch"], rec["shape"], mesh)
+            with mesh:
+                acc = jaxpr_cost(bundle.fn, *bundle.args)
+            rec["accounting"] = {"global_flops": float(acc["flops"]),
+                                 "global_bytes": float(acc["bytes"])}
+            rec["meta"] = {k: (int(v) if isinstance(v, int) else v)
+                           for k, v in bundle.meta.items()}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"ok   {rec['arch']:24s} {rec['shape']:14s} {rec['mesh']:8s} "
+                  f"flops={acc['flops']:.3e}")
+        except Exception as e:
+            print(f"FAIL {path}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Emit EXPERIMENTS.md §Dry-run / §Roofline / §Perf tables from artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import analyse, fmt_table, load_records
+
+
+def dryrun_table(art_dir="experiments/dryrun") -> str:
+    rows = []
+    for rec in load_records(art_dir):
+        if rec.get("status") == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                        f"SKIP | — | — | — | {rec['reason'][:70]} |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                        f"ERROR | — | — | — | {rec.get('error','')[:70]} |")
+            continue
+        mem = rec["memory"]
+        coll = rec.get("collectives_trip_aware", {})
+        note = ""
+        temp = mem.get("temp_size_in_bytes", 0) / 2**30
+        if temp > 16:
+            note = "over single-chip HBM — needs multipod / see §Perf"
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok | "
+            f"{temp:.2f} | {coll.get('total_bytes', 0)/2**30:.2f} | "
+            f"{rec.get('compile_s', 0):.0f} | {note} |")
+    hdr = ("| arch | shape | mesh | status | temp GiB/dev | collective "
+           "GiB/dev/step | compile s | note |\n" + "|" + "---|" * 8)
+    return hdr + "\n" + "\n".join(sorted(rows))
+
+
+def hillclimb_tables(hc_dir="experiments/hillclimb") -> str:
+    out = []
+    for path in sorted(glob.glob(os.path.join(hc_dir, "*.json"))):
+        cell = os.path.basename(path).replace(".json", "")
+        with open(path) as f:
+            log = json.load(f)
+        out.append(f"\n#### {cell}\n")
+        out.append("| variant | hypothesis | compute s | memory s | "
+                   "collective s | dominant | step s | vs baseline |")
+        out.append("|" + "---|" * 8)
+        base = next((e for e in log if e["status"] == "ok"), None)
+        for e in log:
+            if e["status"] != "ok":
+                out.append(f"| {e['variant']} | {e['hypothesis'][:60]} | "
+                           f"ERROR {e.get('error','')[:40]} |||||||")
+                continue
+            speed = (base["step_time_s"] / e["step_time_s"]
+                     if base and e["step_time_s"] else 0)
+            out.append(
+                f"| {e['variant']} | {e['hypothesis'][:60]}… | "
+                f"{e['t_compute_s']:.2e} | {e['t_memory_s']:.2e} | "
+                f"{e['t_collective_s']:.2e} | {e['dominant']} | "
+                f"{e['step_time_s']:.2e} | {speed:.2f}x |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("## §Dry-run (all cells × both meshes)\n")
+    print(dryrun_table())
+    print("\n## §Roofline (single-pod, 256 chips)\n")
+    rows = [a for a in (analyse(r) for r in load_records("experiments/dryrun"))
+            if a and a["mesh"] == "pod"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(fmt_table(rows))
+    print("\n## §Roofline (multi-pod, 512 chips)\n")
+    rows = [a for a in (analyse(r) for r in load_records("experiments/dryrun"))
+            if a and a["mesh"] == "multipod"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(fmt_table(rows))
+    print("\n## §Perf hillclimb logs\n")
+    print(hillclimb_tables())
+
+
+if __name__ == "__main__":
+    main()

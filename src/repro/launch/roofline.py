@@ -1,0 +1,113 @@
+"""Roofline analysis over dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), in seconds-per-step:
+
+  compute    = global_FLOPs / (chips × 197e12)          [bf16 peak]
+  memory     = analytic_HBM_bytes / (chips × 819e9)
+  collective = per_device_collective_bytes / 50e9       [per-link ICI]
+
+Sources and caveats (see EXPERIMENTS.md §Roofline for the full discussion):
+  * global_FLOPs — trip-count-aware jaxpr walk (``launch/flops.py``);
+    ``compiled.cost_analysis()`` counts scan bodies once, so it is recorded
+    but not used. Remat recompute IS included — that's what the
+    MODEL_FLOPS/HLO_FLOPS ratio surfaces.
+  * HBM bytes — analytic per-family napkin model from the step bundle
+    (attention interiors assumed VMEM-resident as on the Pallas target);
+    the no-fusion jaxpr byte proxy is recorded as an upper bound.
+  * collective bytes — while-trip-aware walk of the optimized per-device
+    SPMD program; per-device bytes over per-link bandwidth ≡
+    global/(chips·link_bw).
+
+Usage: python -m repro.launch.roofline [--dir experiments/dryrun] [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+
+def load_records(art_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    flops = rec["accounting"]["global_flops"]
+    mem_bytes = rec["meta"].get("analytic_bytes") or 0
+    coll = rec.get("collectives_trip_aware", rec.get("collectives", {}))
+    coll_bytes_dev = coll.get("total_bytes", 0)
+
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = mem_bytes / (chips * HBM_BW)
+    t_coll = coll_bytes_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = rec["meta"].get("model_flops") or 0
+    ratio = (model_flops / flops) if flops else 0.0
+    # roofline fraction: useful model flops per second at the bound vs peak
+    step_time = bound
+    mfu = (model_flops / step_time) / (chips * PEAK_FLOPS) if step_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant, "step_time_s": step_time,
+        "model_flops": model_flops, "hlo_flops": flops,
+        "useful_ratio": ratio, "roofline_fraction": mfu,
+        "temp_gib": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful (6ND/HLO) | roofline frac | temp GiB |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']*100:.1f}% "
+            f"| {r['temp_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for rec in load_records(args.dir):
+        if args.mesh and rec.get("mesh") != args.mesh:
+            continue
+        a = analyse(rec)
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(fmt_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

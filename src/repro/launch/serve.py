@@ -1,0 +1,148 @@
+"""Retrieval serving driver: batched queries against a PCA-pruned index.
+
+The paper's online path, end to end:
+  1. load the offline artefacts (PCA transform W_m + pruned index D̂)
+  2. batch incoming queries (micro-batching queue with a latency deadline)
+  3. q̂ = W_mᵀ q  (the only added per-query cost: O(dm))
+  4. fused score+top-k scan over the (sharded) index
+  5. return doc ids + scores
+
+``--compare-full`` serves the unpruned index side by side and reports the
+measured speedup vs the O(d/m) prediction.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 --dim 256 \
+      --cutoff 0.5 --queries 256 --batch 32
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DenseIndex, StaticPruner
+from repro.data.synthetic import make_dataset
+
+
+class BatchingQueue:
+    """Micro-batching: collect up to ``max_batch`` requests or flush at the
+    latency deadline — the standard online-serving pattern."""
+
+    def __init__(self, max_batch: int = 32, deadline_ms: float = 2.0):
+        self.q: queue.Queue = queue.Queue()
+        self.max_batch = max_batch
+        self.deadline = deadline_ms / 1e3
+
+    def submit(self, qvec: np.ndarray) -> "queue.Queue":
+        reply: queue.Queue = queue.Queue(maxsize=1)
+        self.q.put((qvec, reply))
+        return reply
+
+    def next_batch(self) -> tuple[np.ndarray, list] | None:
+        try:
+            first = self.q.get(timeout=0.5)
+        except queue.Empty:
+            return None
+        items = [first]
+        t0 = time.time()
+        while len(items) < self.max_batch and (time.time() - t0) < self.deadline:
+            try:
+                items.append(self.q.get_nowait())
+            except queue.Empty:
+                time.sleep(0.0002)
+        vecs = np.stack([x[0] for x in items])
+        replies = [x[1] for x in items]
+        return vecs, replies
+
+
+class RetrievalServer:
+    def __init__(self, index: DenseIndex, pruner: StaticPruner | None,
+                 k: int = 10, max_batch: int = 32):
+        self.index = index
+        self.pruner = pruner
+        self.k = k
+        self.batcher = BatchingQueue(max_batch=max_batch)
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            item = self.batcher.next_batch()
+            if item is None:
+                continue
+            vecs, replies = item
+            q = jnp.asarray(vecs)
+            if self.pruner is not None:
+                q = self.pruner.transform_queries(q)
+            scores, ids = self.index.search(q, k=self.k)
+            scores = np.asarray(scores)
+            ids = np.asarray(ids)
+            for i, r in enumerate(replies):
+                r.put((scores[i], ids[i]))
+
+    def query(self, qvec: np.ndarray, timeout: float = 10.0):
+        return self.batcher.submit(qvec).get(timeout=timeout)
+
+    def close(self):
+        self._stop.set()
+        self._worker.join(timeout=2.0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=50000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--cutoff", type=float, default=0.5)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--compare-full", action="store_true")
+    args = ap.parse_args()
+
+    print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
+    ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,
+                      query_sets=("dl19",))
+    D = jnp.asarray(ds.docs)
+    Q = np.asarray(ds.queries["dl19"])
+    Q = np.tile(Q, (max(1, args.queries // len(Q) + 1), 1))[:args.queries]
+
+    pruner = StaticPruner(cutoff=args.cutoff).fit(D)
+    index = DenseIndex.build(pruner.prune_index(D))
+    print(f"[serve] pruned index: {index.n} x {index.dim} "
+          f"({index.nbytes/2**20:.1f} MiB)")
+
+    server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch)
+    lat = []
+    t0 = time.time()
+    for i in range(args.queries):
+        t = time.time()
+        server.query(Q[i])
+        lat.append(time.time() - t)
+    wall = time.time() - t0
+    server.close()
+    lat_ms = np.array(lat) * 1e3
+    print(f"[serve] pruned: {args.queries / wall:.1f} qps  "
+          f"p50={np.percentile(lat_ms, 50):.2f}ms "
+          f"p99={np.percentile(lat_ms, 99):.2f}ms")
+
+    if args.compare_full:
+        full = DenseIndex.build(D)
+        server2 = RetrievalServer(full, None, k=args.k, max_batch=args.batch)
+        t0 = time.time()
+        for i in range(args.queries):
+            server2.query(Q[i])
+        wall_full = time.time() - t0
+        server2.close()
+        print(f"[serve] full:   {args.queries / wall_full:.1f} qps  "
+              f"speedup={wall_full / wall:.2f}x "
+              f"(O(d/m) predicts {args.dim / pruner.kept_dims:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: LM transformers (dense/MoE), bi-encoder, GNN, recsys."""

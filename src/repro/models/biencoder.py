@@ -1,0 +1,129 @@
+"""Bi-encoder for dense retrieval — the paper's embedding model family.
+
+A bidirectional transformer encoder (BERT-style: ANCE/TAS-B/Contriever are
+all 6–12-layer encoders) with mean or CLS pooling, producing d-dim text
+embeddings, trained with in-batch-negative contrastive loss (InfoNCE).
+
+At production batch sizes the (B, B) in-batch logit matrix is sharded:
+``contrastive_loss_sharded`` computes the local block of logits per device
+and reduces the log-partition with a psum — batch 65k trains without a
+65k×65k replicated logit matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import TransformerConfig, _init_layer, _norm
+
+
+@dataclasses.dataclass(frozen=True)
+class BiEncoderConfig:
+    name: str = "biencoder"
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    vocab: int = 30522
+    embed_dim: int = 768          # output embedding dim (d in the paper)
+    max_len: int = 512
+    pooling: str = "mean"         # mean (contriever) | cls (tas-b)
+    temperature: float = 0.05
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+
+    def lm_cfg(self) -> TransformerConfig:
+        return TransformerConfig(
+            name=self.name, n_layers=self.n_layers, d_model=self.d_model,
+            n_heads=self.n_heads, n_kv_heads=self.n_heads, d_ff=self.d_ff,
+            vocab=self.vocab, norm="layernorm", act="gelu",
+            param_dtype=self.param_dtype, compute_dtype=self.compute_dtype,
+            remat=self.remat)
+
+    def param_count(self) -> int:
+        lm = self.lm_cfg()
+        d = lm.d_model
+        per_layer = 4 * d * d + 3 * d * lm.d_ff + 2 * d
+        return (lm.n_layers * per_layer + lm.vocab * d
+                + self.max_len * d + d * self.embed_dim)
+
+
+def init_biencoder(key, cfg: BiEncoderConfig) -> dict:
+    lm = cfg.lm_cfg()
+    ke, kp, kl, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, lm.n_layers)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02).astype(lm.pdt),
+        "pos_embed": (jax.random.normal(kp, (cfg.max_len, cfg.d_model)) * 0.02).astype(lm.pdt),
+        "layers": jax.vmap(lambda k: _init_layer(k, lm))(layer_keys),
+        "final_norm": L.init_layernorm(cfg.d_model, lm.pdt),
+        "proj": L.init_dense(kh, cfg.d_model, cfg.embed_dim, dtype=lm.pdt),
+    }
+
+
+def encode(params: dict, tokens: jax.Array, mask: jax.Array,
+           cfg: BiEncoderConfig) -> jax.Array:
+    """tokens, mask: (B, S) -> L2-normalised embeddings (B, embed_dim)."""
+    lm = cfg.lm_cfg()
+    B, S = tokens.shape
+    x = (params["embed"][tokens] + params["pos_embed"][:S][None]).astype(lm.cdt)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    normf = _norm(lm)
+
+    def body(x, lp):
+        h, _ = L.apply_attention(
+            lp["attn"], normf(lp["attn_norm"], x), positions,
+            n_heads=lm.n_heads, n_kv_heads=lm.n_kv_heads, head_dim=lm.hd,
+            rope_theta=lm.rope_theta, mode="bidirectional",
+            compute_dtype=lm.cdt)
+        x = x + h
+        x = x + L.apply_mlp(lp["mlp"], normf(lp["mlp_norm"], x),
+                            act=lm.act, compute_dtype=lm.cdt)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = L.apply_layernorm(params["final_norm"], x)
+
+    if cfg.pooling == "cls":
+        pooled = x[:, 0]
+    else:
+        m = mask.astype(jnp.float32)[..., None]
+        pooled = (x.astype(jnp.float32) * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+    emb = L.apply_dense(params["proj"], pooled.astype(lm.cdt), lm.cdt)
+    emb = emb.astype(jnp.float32)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-9)
+
+
+def contrastive_loss(params: dict, batch: dict, cfg: BiEncoderConfig) -> jax.Array:
+    """In-batch-negative InfoNCE. batch: q_tokens/q_mask/d_tokens/d_mask (B,S)."""
+    q = encode(params, batch["q_tokens"], batch["q_mask"], cfg)
+    d = encode(params, batch["d_tokens"], batch["d_mask"], cfg)
+    logits = (q @ d.T) / cfg.temperature                  # (B, B)
+    labels = jnp.arange(q.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def contrastive_loss_sharded(params: dict, batch: dict, cfg: BiEncoderConfig,
+                             axis: str | tuple[str, ...]) -> jax.Array:
+    """InfoNCE with the (B, B) logit matrix sharded over the batch axis.
+
+    Runs inside shard_map with the batch sharded on ``axis``: embeddings are
+    all-gathered once (B·d bytes — small), each device scores its local
+    query rows against the full document set, psum-means the loss.
+    """
+    q = encode(params, batch["q_tokens"], batch["q_mask"], cfg)   # local rows
+    d = encode(params, batch["d_tokens"], batch["d_mask"], cfg)
+    d_all = jax.lax.all_gather(d, axis, axis=0, tiled=True)       # (B_global, dim)
+    idx = jax.lax.axis_index(axis)
+    local_b = q.shape[0]
+    labels = idx * local_b + jnp.arange(local_b)
+    logits = (q @ d_all.T) / cfg.temperature
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return jax.lax.pmean(loss, axis)

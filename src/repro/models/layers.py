@@ -1,0 +1,295 @@
+"""Neural net building blocks, pure-functional over param pytrees.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take an explicit PRNG key
+  * ``compute_dtype`` casts happen at apply time; params keep their storage
+    dtype (fp32 master for training, bf16 for serving)
+  * attention supports GQA, RoPE, optional QKV bias, causal / bidirectional /
+    sliding-window masking, and a KV cache for decode
+  * long sequences use a blocked (online-softmax) attention path so the
+    (S, S) score matrix never materialises — the pure-JAX analogue of
+    flash attention, adequate for AOT memory analysis and CPU validation
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Linear / norms
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_dense(p: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = p["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions. positions: (...,) int32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, Dh); cos/sin: (..., S, half) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+MaskMode = Literal["causal", "bidirectional", "sliding"]
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, bias=False, dtype=dtype),
+    }
+
+
+_KPAD = 2 ** 30  # sentinel position marking padded key slots
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, mode: MaskMode,
+               window: int | None) -> jax.Array:
+    """Additive mask bias (Q, K) in fp32: 0 allowed, -inf disallowed."""
+    ok = jnp.broadcast_to(k_pos[None, :] < _KPAD,
+                          (q_pos.shape[0], k_pos.shape[0]))
+    if mode in ("causal", "sliding"):
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if mode == "sliding" and window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _gqa_expand(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, Hkv, Dh) -> (B, S, H, Dh) by repeating each KV head."""
+    hkv = k.shape[2]
+    rep = n_heads // hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def dense_attention(q, k, v, q_pos, k_pos, mode: MaskMode, window=None):
+    """Reference attention: explicit (Q, K) scores. q: (B,Sq,H,Dh)."""
+    dh = q.shape[-1]
+    n_heads = q.shape[2]
+    k = _gqa_expand(k, n_heads)
+    v = _gqa_expand(v, n_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    s = s + _mask_bias(q_pos, k_pos, mode, window)[None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return o
+
+
+def blocked_attention(q, k, v, q_pos, k_pos, mode: MaskMode, window=None,
+                      q_chunk: int = 1024, k_chunk: int = 1024):
+    """Online-softmax attention: scores exist only per (q_chunk, k_chunk) tile.
+
+    Pure-JAX flash-attention analogue (lax.scan over KV tiles inside a scan
+    over Q tiles). On real TPU the same tiling maps to a splash-attention
+    Pallas kernel; here the point is the bounded working set in the compiled
+    HLO (dry-run memory analysis) and CPU-verifiable numerics.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    k = _gqa_expand(k, H)
+    v = _gqa_expand(v, H)
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = -(-Sq // q_chunk), -(-Sk // k_chunk)
+    # pad to tile multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * k_chunk - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * k_chunk - Sk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, nq * q_chunk - Sq), constant_values=-1)
+    kpos = jnp.pad(k_pos, (0, nk * k_chunk - Sk), constant_values=_KPAD)
+    scale = 1.0 / np.sqrt(Dh)
+
+    q_tiles = qp.reshape(B, nq, q_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    k_tiles = kp.reshape(B, nk, k_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    v_tiles = vp.reshape(B, nk, k_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    qpos_t = qpos.reshape(nq, q_chunk)
+    kpos_t = kpos.reshape(nk, k_chunk)
+
+    def q_step(_, q_in):
+        qt, qpt = q_in                                   # (B,qc,H,Dh), (qc,)
+
+        def k_step(carry, k_in):
+            m, l, acc = carry
+            kt, vt, kpt = k_in
+            s = jnp.einsum("bqhd,bkhd->bhqk", qt.astype(jnp.float32),
+                           kt.astype(jnp.float32)) * scale
+            s = s + _mask_bias(qpt, kpt, mode, window)[None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vt.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        # finite init so fully-masked tiles keep alpha = exp(m - m_new) finite
+        m0 = jnp.full((B, H, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dh), jnp.float32)
+        # remat both tile scans: without it autodiff saves a (B,H,qc,kc)
+        # softmax residual per tile pair — the exact quadratic buffer this
+        # path exists to avoid
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(k_step), (m0, l0, a0),
+                                      (k_tiles, v_tiles, kpos_t))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)           # (B,qc,H,Dh)
+
+    _, o_tiles = jax.lax.scan(jax.checkpoint(q_step), None, (q_tiles, qpos_t))
+    o = o_tiles.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, Dh)
+    return o[:, :Sq].astype(v.dtype)
+
+
+def apply_attention(p: dict, x: jax.Array, positions: jax.Array, *,
+                    n_heads: int, n_kv_heads: int, head_dim: int,
+                    rope_theta: float, mode: MaskMode = "causal",
+                    window: int | None = None,
+                    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache_positions: jax.Array | None = None,
+                    compute_dtype=jnp.bfloat16,
+                    blocked_threshold: int = 8192,
+                    q_chunk: int = 1024, k_chunk: int = 1024):
+    """Full attention block.
+
+    Without cache: self-attention over x ((B, S, d)) with ``positions`` (S,).
+    With cache: decode — x is (B, 1, d) new tokens; cache k/v are
+    (B, S_cache, Hkv, Dh); ``cache_positions`` (S_cache,) give each slot's
+    absolute position (supports rolling sliding-window buffers).
+    Returns (out (B,S,d), (k_all, v_all)).
+    """
+    B, S, _ = x.shape
+    q = apply_dense(p["wq"], x, compute_dtype).reshape(B, S, n_heads, head_dim)
+    k = apply_dense(p["wk"], x, compute_dtype).reshape(B, S, n_kv_heads, head_dim)
+    v = apply_dense(p["wv"], x, compute_dtype).reshape(B, S, n_kv_heads, head_dim)
+
+    cos, sin = rope_tables(positions, head_dim, rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        k_all = jnp.concatenate([ck.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([cv.astype(v.dtype), v], axis=1)
+        k_pos = jnp.concatenate([cache_positions, positions])
+    else:
+        k_all, v_all, k_pos = k, v, positions
+
+    Sk = k_all.shape[1]
+    attn = blocked_attention if max(S, Sk) > blocked_threshold else dense_attention
+    kwargs = dict(q_chunk=q_chunk, k_chunk=k_chunk) if attn is blocked_attention else {}
+    o = attn(q, k_all, v_all, positions, k_pos, mode, window, **kwargs)
+    o = o.reshape(B, S, n_heads * head_dim)
+    out = apply_dense(p["wo"], o, compute_dtype)
+    return out, (k_all, v_all)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": init_dense(k1, d_model, d_ff, dtype=dtype),
+         "w2": init_dense(k2, d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["w3"] = init_dense(k3, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, *, act: str = "silu",
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    h = apply_dense(p["w1"], x, compute_dtype)
+    a = getattr(jax.nn, act)(h)
+    if "w3" in p:
+        a = a * apply_dense(p["w3"], x, compute_dtype)
+    return apply_dense(p["w2"], a, compute_dtype)
+
+
+def init_mlp_stack(key, dims: tuple[int, ...], *, bias: bool = True,
+                   dtype=jnp.float32) -> list:
+    """Plain MLP tower (recsys): dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return [init_dense(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+            for i, k in enumerate(keys)]
+
+
+def apply_mlp_stack(layers: list, x: jax.Array, *, act: str = "relu",
+                    final_act: bool = False, compute_dtype=jnp.float32) -> jax.Array:
+    actfn = getattr(jax.nn, act)
+    n = len(layers)
+    for i, p in enumerate(layers):
+        x = apply_dense(p, x, compute_dtype)
+        if i < n - 1 or final_act:
+            x = actfn(x)
+    return x

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+TPU-native einsum dispatch (the classic GShard/T5X formulation): tokens are
+split into groups of ``group_size``; within a group each expert accepts at
+most ``C = group_size * top_k * capacity_factor / n_experts`` tokens.
+Dispatch/combine are one-hot einsum tensors, so the whole layer is static-
+shaped and SPMD-shardable:
+
+  * expert weight tensors are (E, d, f) — sharded E→'model' when E divides
+    the axis (expert parallelism, Arctic's 128 experts = 8/chip on a 16-wide
+    axis), else f→'model' (tensor parallelism inside each expert, Mixtral's
+    8 experts on 16 chips);
+  * the dispatch einsum + expert GEMMs lower to the all-to-all / grouped
+    GEMM schedule XLA emits for EP meshes.
+
+Transient footprint per layer ≈ tokens·group_size·top_k·cf·bytes —
+independent of E; group_size trades dispatch-tensor size against padding
+waste. Router uses Mixtral-style top-k softmax renormalisation + the
+Switch/GShard auxiliary load-balancing loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_dense
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, *,
+             gated: bool = True, dtype=jnp.float32) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale_in = 1.0 / np.sqrt(d_model)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "router": init_dense(kr, d_model, n_experts, dtype=dtype),
+        "w1": (jax.random.normal(k1, (n_experts, d_model, d_ff)) * scale_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (n_experts, d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(k3, (n_experts, d_model, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+def _route(logits: jax.Array, top_k: int, n_experts: int
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. logits: (G, S, E). Returns (gates (G,S,E) with top-k
+    softmax-renormalised weights, mask (G,S,E) in {0,1}, aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)              # (G,S,k)
+    top_w = jax.nn.softmax(top_vals.astype(jnp.float32), axis=-1) # renormalise
+    mask = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32)  # (G,S,k,E)
+    gates = (top_w[..., None] * mask).sum(axis=2)                 # (G,S,E)
+    mask_any = mask.sum(axis=2)                                   # (G,S,E)
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    f = mask_any.mean(axis=(0, 1))                                # fraction routed
+    P = probs.mean(axis=(0, 1))                                   # router prob mass
+    aux = n_experts * jnp.sum(f * P)
+    return gates, mask_any, aux
+
+
+def apply_moe(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, group_size: int = 256,
+              act: str = "silu", compute_dtype=jnp.bfloat16
+              ) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN. x: (B, S, d) -> (B, S, d), plus aux load-balance loss.
+
+    Tokens are flattened and regrouped to ``group_size``; remainder tokens
+    are padded into the last group (their gates are zeroed).
+    """
+    B, S, d = x.shape
+    T = B * S
+    g = min(group_size, T)
+    G = -(-T // g)
+    pad = G * g - T
+    xt = x.reshape(T, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(G, g, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    if pad:
+        valid = (jnp.arange(G * g) < T).reshape(G, g)
+        logits = jnp.where(valid[..., None], logits, -1e9)
+    gates, mask, aux = _route(logits, top_k, n_experts)
+
+    capacity = max(1, int(g * top_k * capacity_factor / n_experts))
+    # position of each token within its expert's buffer (per group)
+    pos_in_expert = (jnp.cumsum(mask, axis=1) - 1.0) * mask       # (G,S,E)
+    keep = mask * (pos_in_expert < capacity)
+    gates = gates * keep
+    # renormalise combine weights after capacity drops
+    denom = jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    combine = (gates / denom) * (gates.sum(-1, keepdims=True) > 0)
+    onehot_c = jax.nn.one_hot(pos_in_expert, capacity, dtype=jnp.float32)
+    dispatch = keep[..., None] * onehot_c                          # (G,S,E,C)
+
+    xc = xg.astype(compute_dtype)
+    disp = dispatch.astype(compute_dtype)
+    comb = (combine[..., None] * onehot_c).astype(compute_dtype)   # (G,S,E,C)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp, xc)             # (E,G,C,d)
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w1"].astype(compute_dtype))
+    a = getattr(jax.nn, act)(h)
+    if "w3" in p:
+        a = a * jnp.einsum("egcd,edf->egcf", expert_in, p["w3"].astype(compute_dtype))
+    expert_out = jnp.einsum("egcf,efd->egcd", a, p["w2"].astype(compute_dtype))
+    yg = jnp.einsum("gsec,egcd->gsd", comb, expert_out)            # (G,S,d)
+
+    y = yg.reshape(G * g, d)[:T].reshape(B, S, d)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,371 @@
+"""Recommender models: DLRM, DeepFM, AutoInt, Two-Tower retrieval.
+
+JAX has no native EmbeddingBag and no CSR sparse — the embedding substrate
+here IS part of the system:
+
+  * ``embedding_bag``          — gather (``jnp.take``) + mean/sum over the
+                                 hotness dim; single-hot is the H=1 case.
+  * ``sharded_embedding_bag``  — tables row-sharded over the mesh 'model'
+                                 axis; each device resolves in-range ids
+                                 against its local shard (mask + take) and a
+                                 ``psum`` over 'model' assembles the batch —
+                                 the TPU-native expression of DLRM's
+                                 model-parallel-embedding all-to-all.
+
+Interactions: DLRM pairwise-dot, FM second-order identity
+(½[(Σv)² − Σv²]), AutoInt multi-head self-attention over field tokens.
+
+The two-tower model's candidate scoring path is the paper's exact dense-
+retrieval setting: its item-side index is a ``repro.core`` DenseIndex and is
+PCA-prunable offline (256 → m dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (apply_dense, init_dense, init_mlp_stack,
+                                 apply_mlp_stack)
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+
+def init_embedding_tables(key, vocab_sizes: Sequence[int], dim: int,
+                          dtype=jnp.float32) -> list[jax.Array]:
+    keys = jax.random.split(key, len(vocab_sizes))
+    return [
+        (jax.random.normal(k, (int(v), dim)) / np.sqrt(dim)).astype(dtype)
+        for k, v in zip(keys, vocab_sizes)
+    ]
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, *, combiner: str = "mean"
+                  ) -> jax.Array:
+    """idx: (B,) single-hot or (B, H) multi-hot -> (B, dim)."""
+    if idx.ndim == 1:
+        return jnp.take(table, idx, axis=0)
+    g = jnp.take(table, idx.reshape(-1), axis=0).reshape(*idx.shape, -1)
+    if combiner == "sum":
+        return g.sum(axis=-2)
+    return g.mean(axis=-2)
+
+
+def sharded_embedding_bag(table: jax.Array, idx: jax.Array, *, axis: str,
+                          vocab: int, combiner: str = "mean") -> jax.Array:
+    """Row-sharded lookup inside shard_map.
+
+    ``table``: local shard (vocab/num_shards, dim) — rows
+    [shard*rows : (shard+1)*rows) of the logical table. ``idx`` replicated.
+    Out-of-range ids resolve to 0 locally; psum assembles the true rows.
+    """
+    n_shards = jax.lax.axis_size(axis)
+    rows = vocab // n_shards
+    shard = jax.lax.axis_index(axis)
+    lo = shard * rows
+    flat = idx.reshape(-1)
+    local = flat - lo
+    in_range = (local >= 0) & (local < rows)
+    safe = jnp.clip(local, 0, rows - 1)
+    g = jnp.take(table, safe, axis=0)
+    g = jnp.where(in_range[:, None], g, 0.0)
+    g = jax.lax.psum(g, axis)
+    g = g.reshape(*idx.shape, -1)
+    if idx.ndim == 1:
+        return g
+    return g.sum(-2) if combiner == "sum" else g.mean(-2)
+
+
+# ---------------------------------------------------------------------------
+# Interactions
+# ---------------------------------------------------------------------------
+
+
+def dot_interaction(vectors: jax.Array, *, self_interaction: bool = False
+                    ) -> jax.Array:
+    """DLRM pairwise dots. vectors: (B, F, E) -> (B, F·(F−1)/2)."""
+    B, F, E = vectors.shape
+    z = jnp.einsum("bfe,bge->bfg", vectors, vectors)
+    iu, ju = np.triu_indices(F, k=0 if self_interaction else 1)
+    return z[:, iu, ju]
+
+
+def fm_interaction(vectors: jax.Array) -> jax.Array:
+    """FM 2nd-order term: ½ Σ_e [(Σ_f v)² − Σ_f v²]. (B, F, E) -> (B,)."""
+    s = vectors.sum(axis=1)
+    s2 = (vectors ** 2).sum(axis=1)
+    return 0.5 * (s ** 2 - s2).sum(axis=-1)
+
+
+def init_autoint_attn(key, d_in: int, n_heads: int, d_attn: int, dtype=jnp.float32):
+    kq, kk, kv, kr = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_in, n_heads * d_attn, dtype=dtype),
+        "wk": init_dense(kk, d_in, n_heads * d_attn, dtype=dtype),
+        "wv": init_dense(kv, d_in, n_heads * d_attn, dtype=dtype),
+        "wr": init_dense(kr, d_in, n_heads * d_attn, dtype=dtype),  # residual proj
+    }
+
+
+def apply_autoint_attn(p: dict, x: jax.Array, n_heads: int, d_attn: int
+                       ) -> jax.Array:
+    """Self-attention over field tokens. x: (B, F, d) -> (B, F, H·d_attn)."""
+    B, F, _ = x.shape
+    q = apply_dense(p["wq"], x, jnp.float32).reshape(B, F, n_heads, d_attn)
+    k = apply_dense(p["wk"], x, jnp.float32).reshape(B, F, n_heads, d_attn)
+    v = apply_dense(p["wv"], x, jnp.float32).reshape(B, F, n_heads, d_attn)
+    s = jnp.einsum("bfhd,bghd->bhfg", q, k) / np.sqrt(d_attn)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, n_heads * d_attn)
+    r = apply_dense(p["wr"], x, jnp.float32)
+    return jax.nn.relu(o + r)
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "recsys"
+    kind: str = "dlrm"                      # dlrm | deepfm | autoint | two_tower
+    vocab_sizes: tuple[int, ...] = ()
+    embed_dim: int = 128
+    n_dense: int = 0
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    # autoint
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    # deepfm
+    deep_mlp: tuple[int, ...] = ()
+    # two-tower
+    tower_mlp: tuple[int, ...] = (1024, 512, 256)
+    user_vocab: int = 2_000_000
+    item_vocab: int = 1_000_000
+    temperature: float = 0.05
+    param_dtype: str = "float32"
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    def param_count(self) -> int:
+        e = self.embed_dim
+        emb = sum(self.vocab_sizes) * e
+        if self.kind == "dlrm":
+            dims = (self.n_dense,) + self.bot_mlp
+            bot = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+            f = self.n_sparse + 1
+            d_int = f * (f - 1) // 2 + self.bot_mlp[-1]
+            dims = (d_int,) + self.top_mlp
+            top = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+            return emb + bot + top
+        if self.kind == "deepfm":
+            first = sum(self.vocab_sizes)
+            dims = (self.n_sparse * e,) + self.deep_mlp + (1,)
+            deep = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+            return emb + first + deep
+        if self.kind == "autoint":
+            d_l = [e] + [self.n_heads * self.d_attn] * self.n_attn_layers
+            attn = sum(4 * d_l[i] * d_l[i + 1] for i in range(self.n_attn_layers))
+            out = self.n_sparse * d_l[-1]
+            return emb + attn + out + 1
+        # two_tower
+        ue = self.user_vocab * e + self.item_vocab * e
+        dims = (e,) + self.tower_mlp
+        tower = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return ue + 2 * tower
+
+
+# ---------------------------------------------------------------------------
+# Models
+# ---------------------------------------------------------------------------
+
+
+def init_recsys(key, cfg: RecsysConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    ke, k1, k2, k3 = jax.random.split(key, 4)
+    if cfg.kind == "two_tower":
+        ku, ki, ktu, kti = jax.random.split(ke, 4)
+        e = cfg.embed_dim
+        return {
+            "user_embed": (jax.random.normal(ku, (cfg.user_vocab, e)) / np.sqrt(e)).astype(pdt),
+            "item_embed": (jax.random.normal(ki, (cfg.item_vocab, e)) / np.sqrt(e)).astype(pdt),
+            "user_tower": init_mlp_stack(ktu, (e,) + cfg.tower_mlp, dtype=pdt),
+            "item_tower": init_mlp_stack(kti, (e,) + cfg.tower_mlp, dtype=pdt),
+        }
+    p = {"tables": init_embedding_tables(ke, cfg.vocab_sizes, cfg.embed_dim, pdt)}
+    if cfg.kind == "dlrm":
+        p["bot_mlp"] = init_mlp_stack(k1, (cfg.n_dense,) + cfg.bot_mlp, dtype=pdt)
+        f = cfg.n_sparse + 1
+        d_int = f * (f - 1) // 2 + cfg.bot_mlp[-1]
+        p["top_mlp"] = init_mlp_stack(k2, (d_int,) + cfg.top_mlp, dtype=pdt)
+    elif cfg.kind == "deepfm":
+        p["first_order"] = init_embedding_tables(k1, cfg.vocab_sizes, 1, pdt)
+        p["deep_mlp"] = init_mlp_stack(
+            k2, (cfg.n_sparse * cfg.embed_dim,) + cfg.deep_mlp + (1,), dtype=pdt)
+        p["bias"] = jnp.zeros((), pdt)
+    elif cfg.kind == "autoint":
+        d_l = [cfg.embed_dim] + [cfg.n_heads * cfg.d_attn] * cfg.n_attn_layers
+        keys = jax.random.split(k1, cfg.n_attn_layers)
+        p["attn_layers"] = [
+            init_autoint_attn(keys[i], d_l[i], cfg.n_heads, cfg.d_attn, pdt)
+            for i in range(cfg.n_attn_layers)]
+        p["out"] = init_dense(k2, cfg.n_sparse * d_l[-1], 1, bias=True, dtype=pdt)
+    return p
+
+
+def _lookup_all(tables: list, sparse_idx: jax.Array, *, mesh_axis: str | None = None,
+                vocab_sizes: Sequence[int] = ()) -> jax.Array:
+    """sparse_idx: (B, F) -> stacked embeddings (B, F, E)."""
+    cols = []
+    for f, table in enumerate(tables):
+        idx = sparse_idx[:, f]
+        if mesh_axis is None:
+            cols.append(embedding_bag(table, idx))
+        else:
+            cols.append(sharded_embedding_bag(table, idx, axis=mesh_axis,
+                                              vocab=int(vocab_sizes[f])))
+    return jnp.stack(cols, axis=1)
+
+
+def forward_ctr(params: dict, batch: dict, cfg: RecsysConfig, *,
+                mesh_axis: str | None = None) -> jax.Array:
+    """CTR logit. batch: sparse (B, F) int32 [+ dense (B, n_dense) for dlrm]."""
+    emb = _lookup_all(params["tables"], batch["sparse"], mesh_axis=mesh_axis,
+                      vocab_sizes=cfg.vocab_sizes)           # (B, F, E)
+    return forward_ctr_from_emb(params, emb, batch, cfg)
+
+
+def forward_ctr_from_emb(params: dict, emb: jax.Array, batch: dict,
+                         cfg: RecsysConfig) -> jax.Array:
+    """CTR logit from pre-gathered embeddings (B, F, E).
+
+    Split out so the training step can gather rows OUTSIDE autodiff and
+    differentiate w.r.t. the rows themselves (sparse-grad path — see
+    ``repro.optim.rowwise``)."""
+    if cfg.kind == "dlrm":
+        dense_v = apply_mlp_stack(params["bot_mlp"], batch["dense"],
+                                  act="relu", final_act=True)
+        feats = jnp.concatenate([dense_v[:, None, :], emb], axis=1)
+        inter = dot_interaction(feats)
+        z = jnp.concatenate([dense_v, inter], axis=-1)
+        return apply_mlp_stack(params["top_mlp"], z, act="relu")[:, 0]
+    if cfg.kind == "deepfm":
+        fm2 = fm_interaction(emb)
+        first = sum(embedding_bag(t, batch["sparse"][:, f])[:, 0]
+                    for f, t in enumerate(params["first_order"]))
+        deep = apply_mlp_stack(params["deep_mlp"],
+                               emb.reshape(emb.shape[0], -1), act="relu")[:, 0]
+        return params["bias"] + first + fm2 + deep
+    # autoint
+    x = emb
+    for lp in params["attn_layers"]:
+        x = apply_autoint_attn(lp, x, cfg.n_heads, cfg.d_attn)
+    flat = x.reshape(x.shape[0], -1)
+    return apply_dense(params["out"], flat, jnp.float32)[:, 0]
+
+
+def bce_loss(params: dict, batch: dict, cfg: RecsysConfig, *,
+             mesh_axis: str | None = None) -> jax.Array:
+    logit = forward_ctr(params, batch, cfg, mesh_axis=mesh_axis)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# -- two-tower ---------------------------------------------------------------
+
+
+def user_embedding(params: dict, user_ids: jax.Array) -> jax.Array:
+    e = jnp.take(params["user_embed"], user_ids, axis=0)
+    u = apply_mlp_stack(params["user_tower"], e, act="relu")
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-9)
+
+
+def item_embedding(params: dict, item_ids: jax.Array) -> jax.Array:
+    e = jnp.take(params["item_embed"], item_ids, axis=0)
+    v = apply_mlp_stack(params["item_tower"], e, act="relu")
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+
+
+def two_tower_loss(params: dict, batch: dict, cfg: RecsysConfig,
+                   logit_sharding=None) -> jax.Array:
+    """In-batch sampled softmax with logQ correction.
+
+    batch: user_ids (B,), item_ids (B,), item_logq (B,) — log sampling
+    probability of each in-batch negative (Yi et al., RecSys'19).
+    ``logit_sharding``: optional NamedSharding constraint for the (B, B)
+    logit matrix — at B=65k the matrix is 17 GB and must live 2-D-sharded
+    (rows over dp, cols over tp); the constraint pins XLA to that layout.
+    """
+    u = user_embedding(params, batch["user_ids"])
+    v = item_embedding(params, batch["item_ids"])
+    logits = (u @ v.T) / cfg.temperature - batch["item_logq"][None, :]
+    if logit_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logit_sharding)
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def two_tower_loss_sharded(params: dict, batch: dict, cfg: RecsysConfig,
+                           axis) -> jax.Array:
+    """Sharded in-batch softmax: (B, B) logits blocked over the batch axis."""
+    u = user_embedding(params, batch["user_ids"])
+    v = item_embedding(params, batch["item_ids"])
+    v_all = jax.lax.all_gather(v, axis, axis=0, tiled=True)
+    logq_all = jax.lax.all_gather(batch["item_logq"], axis, axis=0, tiled=True)
+    idx = jax.lax.axis_index(axis)
+    local_b = u.shape[0]
+    labels = idx * local_b + jnp.arange(local_b)
+    logits = (u @ v_all.T) / cfg.temperature - logq_all[None, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return jax.lax.pmean(loss, axis)
+
+
+def ctr_user_item_split(cfg: RecsysConfig) -> tuple[int, int]:
+    """Field split for CTR retrieval: first half user-side, rest item-side."""
+    f_user = cfg.n_sparse // 2
+    return f_user, cfg.n_sparse - f_user
+
+
+def ctr_retrieval_scores(params: dict, user_batch: dict, cand_sparse: jax.Array,
+                         cfg: RecsysConfig) -> jax.Array:
+    """Score one user context against C candidate items (CTR models).
+
+    ``user_batch``: sparse (1, F_user) [+ dense (1, n_dense)];
+    ``cand_sparse``: (C, F_item). The user fields broadcast across
+    candidates; a cached-user-side variant is a §Perf optimisation.
+    Returns logits (C,).
+    """
+    C = cand_sparse.shape[0]
+    user_sp = jnp.broadcast_to(user_batch["sparse"], (C, user_batch["sparse"].shape[1]))
+    batch = {"sparse": jnp.concatenate([user_sp, cand_sparse], axis=1)}
+    if "dense" in user_batch:
+        batch["dense"] = jnp.broadcast_to(user_batch["dense"],
+                                          (C, user_batch["dense"].shape[1]))
+    return forward_ctr(batch=batch, params=params, cfg=cfg)
+
+
+def score_candidates(params: dict, user_ids: jax.Array, item_index: jax.Array,
+                     k: int = 100) -> tuple[jax.Array, jax.Array]:
+    """Retrieval: user(s) vs a precomputed (possibly PCA-pruned) item index.
+
+    ``item_index``: (n_candidates, m) — built offline via
+    ``item_embedding`` + optional ``repro.core.StaticPruner``; queries must
+    be transformed by the same pruner before calling.
+    """
+    u = user_embedding(params, user_ids)
+    from repro.core.index import _scan_topk
+    return _scan_topk(item_index, u, min(k, item_index.shape[0]))

@@ -1,0 +1,387 @@
+"""Decoder-only LM: dense or MoE, GQA, RoPE, optional sliding window.
+
+Layers are *stacked* (leading L dim) and executed with ``jax.lax.scan`` so
+40-layer models compile in seconds and the HLO stays mesh-partitioner-
+friendly. Remat wraps the scan body (configurable policy).
+
+Step functions:
+  * ``forward_train``  — causal LM loss over (B, S) tokens
+  * ``prefill``        — returns logits + stacked KV cache
+  * ``decode_step``    — one token against an existing cache (full or
+                         rolling sliding-window buffer)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 512
+    vocab: int = 1024
+    head_dim: int | None = None          # default d_model // n_heads
+    # MoE (n_experts=0 → dense)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_group_size: int = 256
+    dense_residual: bool = False         # Arctic: parallel dense FFN + MoE
+    residual_d_ff: int | None = None     # d_ff of the parallel dense branch
+    moe_dp_dim: str = "ff"               # which expert dim FSDP-shards: ff|d_model
+    # attention
+    sliding_window: int | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # self-attention switches to the online-softmax blocked path above this
+    # seq len: a dense (B,H,S,S) score tensor at S=4096 is already ~9 GiB
+    # per device at production batch — tiles keep it to (B,H,qc,kc).
+    blocked_attn_threshold: int = 2048
+    attn_q_chunk: int = 1024
+    attn_k_chunk: int = 1024
+    # misc
+    tie_embeddings: bool = False
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    act: str = "silu"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+    # training-step shape: gradient-accumulation microbatches + accum dtype
+    microbatch: int = 1
+    grad_accum_dtype: str = "float32"
+    # parallelism policy: "2d" = FSDP×TP rules; "dp_only" = replicate params,
+    # shard batch only (the right layout for sub-1B models — see §Perf)
+    parallelism: str = "2d"
+    # activation sharding anchor (NamedSharding for (B, S, d) tensors).
+    # Needed with 2-D FSDP×TP param sharding: the embedding gather would
+    # otherwise propagate the table's d-over-dp sharding onto activations,
+    # silently un-sharding the batch dim everywhere downstream.
+    act_sharding: object = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.n_experts:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+            if self.dense_residual:
+                ffn += 3 * d * (self.residual_d_ff or self.d_ff)
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        moe_all = self.n_layers * self.n_experts * 3 * d * self.d_ff
+        moe_active = self.n_layers * self.top_k * 3 * d * self.d_ff
+        return full - moe_all + moe_active
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: TransformerConfig) -> dict:
+    ka, km, kr = jax.random.split(key, 3)
+    p = {
+        "attn_norm": (L.init_rmsnorm if cfg.norm == "rmsnorm" else L.init_layernorm)(cfg.d_model, cfg.pdt),
+        "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, qkv_bias=cfg.qkv_bias, dtype=cfg.pdt),
+        "mlp_norm": (L.init_rmsnorm if cfg.norm == "rmsnorm" else L.init_layernorm)(cfg.d_model, cfg.pdt),
+    }
+    if cfg.n_experts:
+        p["moe"] = M.init_moe(km, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype=cfg.pdt)
+        if cfg.dense_residual:
+            p["mlp"] = L.init_mlp(kr, cfg.d_model, cfg.residual_d_ff or cfg.d_ff, dtype=cfg.pdt)
+    else:
+        p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, dtype=cfg.pdt)
+    return p
+
+
+def init_lm(key, cfg: TransformerConfig) -> dict:
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02).astype(cfg.pdt),
+        "layers": stacked,
+        "final_norm": (L.init_rmsnorm if cfg.norm == "rmsnorm" else L.init_layernorm)(cfg.d_model, cfg.pdt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(ku, (cfg.vocab, cfg.d_model)) * 0.02).astype(cfg.pdt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg):
+    return L.apply_rmsnorm if cfg.norm == "rmsnorm" else L.apply_layernorm
+
+
+def _layer_fwd(cfg: TransformerConfig, lp: dict, x: jax.Array,
+               positions: jax.Array, mode: str,
+               kv_cache=None, cache_positions=None):
+    x = _anchor(x, cfg)
+    normf = _norm(cfg)
+    attn_mode = "sliding" if cfg.sliding_window else "causal"
+    h, new_kv = L.apply_attention(
+        lp["attn"], normf(lp["attn_norm"], x), positions,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, mode=attn_mode, window=cfg.sliding_window,
+        kv_cache=kv_cache, cache_positions=cache_positions,
+        compute_dtype=cfg.cdt, blocked_threshold=cfg.blocked_attn_threshold,
+        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    x = x + h
+    xn = normf(lp["mlp_norm"], x)
+    aux = jnp.float32(0.0)
+    if cfg.n_experts:
+        mo, aux = M.apply_moe(lp["moe"], xn, n_experts=cfg.n_experts,
+                              top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                              group_size=cfg.moe_group_size, act=cfg.act,
+                              compute_dtype=cfg.cdt)
+        if cfg.dense_residual:
+            mo = mo + L.apply_mlp(lp["mlp"], xn, act=cfg.act, compute_dtype=cfg.cdt)
+    else:
+        mo = L.apply_mlp(lp["mlp"], xn, act=cfg.act, compute_dtype=cfg.cdt)
+    return x + mo, aux, new_kv
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens].astype(cfg.cdt)
+    return _anchor(x, cfg)
+
+
+def _anchor(x, cfg):
+    if cfg.act_sharding is not None:
+        return jax.lax.with_sharding_constraint(x, cfg.act_sharding)
+    return x
+
+
+def _unembed(params, x, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(cfg.cdt)).astype(jnp.float32)
+
+
+def forward_hidden(params: dict, tokens: jax.Array, cfg: TransformerConfig
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Token ids (B, S) -> final hidden states (B, S, d) + total aux loss."""
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, _ = _layer_fwd(cfg, lp, x, positions, "train")
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    x = _norm(cfg)(params["final_norm"], x)
+    return x, aux
+
+
+def forward_train(params: dict, tokens: jax.Array, labels: jax.Array,
+                  cfg: TransformerConfig, logit_sharding=None,
+                  loss_chunk: int = 2048) -> jax.Array:
+    """Causal LM loss (mean xent over non-negative labels) + MoE aux.
+
+    The (B, S, V) logit tensor is the training-step memory peak at scale
+    (1M tokens × 49k-152k vocab = 0.2-3 TB fp32). Two mitigations:
+    ``logit_sharding`` pins logits vocab-sharded over the model axis, and
+    the loss streams over sequence chunks inside a remat'd scan so only a
+    (B, loss_chunk, V/|tp|) slice is ever live.
+    """
+    x, aux = forward_hidden(params, tokens, cfg)
+    B, S, _ = x.shape
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    table = table.astype(cfg.cdt)
+    nchunk = max(1, S // min(loss_chunk, S))
+    xs = x.reshape(B, nchunk, S // nchunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nchunk, S // nchunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bsd,vd->bsv", xc, table).astype(jnp.float32)
+        if logit_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logit_sharding)
+        valid = lc >= 0
+        lab = jnp.maximum(lc, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + jnp.sum(nll * valid), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(chunk_loss),
+                                 (jnp.float32(0.0), jnp.int32(0)), (xs, ls))
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss + cfg.aux_loss_weight * aux / max(cfg.n_layers, 1)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+            cache_len: int | None = None):
+    """Process a prompt; returns (last-position logits, stacked KV cache).
+
+    Cache layout: (L, B, S_cache, Hkv, Dh) per k/v — the scan stacks layer
+    caches; ``cache_len`` > S preallocates decode capacity (static-cache
+    serving: slot i == absolute position i).
+    """
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        x, _, kv = _layer_fwd(cfg, lp, x, positions, "prefill")
+        return x, kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["layers"])
+    x = _norm(cfg)(params["final_norm"], x)
+    logits = _unembed(params, x[:, -1:, :], cfg)
+    if cache_len is not None and cache_len > S:
+        pad = ((0, 0), (0, 0), (0, cache_len - S), (0, 0), (0, 0))
+        caches = (jnp.pad(caches[0], pad), jnp.pad(caches[1], pad))
+    return logits[:, 0], caches
+
+
+def decode_step(params: dict, kv_cache, next_token: jax.Array, pos: jax.Array,
+                cfg: TransformerConfig):
+    """One decode step against a static, preallocated KV cache.
+
+    ``kv_cache``: (k, v) each (L, B, S_max, Hkv, Dh) — capacity-S_max ring of
+    slots; slot i holds absolute position i. ``next_token``: (B,). ``pos``:
+    scalar — the new token's absolute position; its KV is written in place at
+    slot ``pos`` and attention sees slots ≤ pos (vLLM-style static cache:
+    shapes and shardings are step-invariant, which is what lets the serving
+    binary compile exactly once).
+    Returns (logits (B, V), updated cache).
+    """
+    B = next_token.shape[0]
+    S_max = kv_cache[0].shape[2]
+    # slots strictly after `pos` are masked via a sentinel position
+    idx = jnp.arange(S_max, dtype=jnp.int32)
+    cache_positions = jnp.where(idx <= pos, idx, L._KPAD)
+    x = _embed(params, next_token[:, None], cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+    normf = _norm(cfg)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = normf(lp["attn_norm"], x)
+        q = L.apply_dense(lp["attn"]["wq"], h, cfg.cdt).reshape(B, 1, cfg.n_heads, cfg.hd)
+        k = L.apply_dense(lp["attn"]["wk"], h, cfg.cdt).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        v = L.apply_dense(lp["attn"]["wv"], h, cfg.cdt).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        cos, sin = L.rope_tables(positions, cfg.hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos[None], sin[None])
+        k = L.apply_rope(k, cos[None], sin[None])
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
+        mode = "sliding" if cfg.sliding_window else "causal"
+        o = L.dense_attention(q, ck, cv, positions, cache_positions, mode,
+                              cfg.sliding_window)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+        x = x + L.apply_dense(lp["attn"]["wo"], o, cfg.cdt)
+        xn = normf(lp["mlp_norm"], x)
+        if cfg.n_experts:
+            mo, _ = M.apply_moe(lp["moe"], xn, n_experts=cfg.n_experts,
+                                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                                group_size=cfg.moe_group_size, act=cfg.act,
+                                compute_dtype=cfg.cdt)
+            if cfg.dense_residual:
+                mo = mo + L.apply_mlp(lp["mlp"], xn, act=cfg.act, compute_dtype=cfg.cdt)
+        else:
+            mo = L.apply_mlp(lp["mlp"], xn, act=cfg.act, compute_dtype=cfg.cdt)
+        return x + mo, (ck, cv)
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], kv_cache[0], kv_cache[1]))
+    x = _norm(cfg)(params["final_norm"], x)
+    logits = _unembed(params, x, cfg)
+    return logits[:, 0], caches
+
+
+def decode_step_sliding(params: dict, kv_cache, next_token: jax.Array,
+                        pos: jax.Array, cfg: TransformerConfig):
+    """Decode with a rolling sliding-window buffer of size W = cfg.sliding_window.
+
+    The cache stays (L, B, W, Hkv, Dh): the new token overwrites the oldest
+    slot (pos % W). Slot absolute positions are derived from ``pos``. This is
+    what makes 500k-token decoding sub-quadratic *and* constant-memory for
+    SWA models (Mixtral).
+    """
+    W = kv_cache[0].shape[2]
+    slot = jnp.mod(pos, W)
+    # absolute position held in each slot after the write; slots not yet
+    # written (derived position < 0, i.e. pos < W) are masked via sentinel
+    idx = jnp.arange(W, dtype=jnp.int32)
+    cache_pos = jnp.where(idx <= slot, pos - slot + idx, pos - W + (idx - slot))
+    cache_pos = jnp.where(cache_pos >= 0, cache_pos, L._KPAD)
+    B = next_token.shape[0]
+    x = _embed(params, next_token[:, None], cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        normf = _norm(cfg)
+        h = normf(lp["attn_norm"], x)
+        q = L.apply_dense(lp["attn"]["wq"], h, cfg.cdt).reshape(B, 1, cfg.n_heads, cfg.hd)
+        k = L.apply_dense(lp["attn"]["wk"], h, cfg.cdt).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        v = L.apply_dense(lp["attn"]["wv"], h, cfg.cdt).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        cos, sin = L.rope_tables(positions, cfg.hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos[None], sin[None])
+        k = L.apply_rope(k, cos[None], sin[None])
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        o = L.dense_attention(q, ck, cv, positions, cache_pos, "sliding",
+                              cfg.sliding_window)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+        x = x + L.apply_dense(lp["attn"]["wo"], o, cfg.cdt)
+        xn = normf(lp["mlp_norm"], x)
+        if cfg.n_experts:
+            mo, _ = M.apply_moe(lp["moe"], xn, n_experts=cfg.n_experts,
+                                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                                group_size=cfg.moe_group_size, act=cfg.act,
+                                compute_dtype=cfg.cdt)
+            if cfg.dense_residual:
+                mo = mo + L.apply_mlp(lp["mlp"], xn, act=cfg.act, compute_dtype=cfg.cdt)
+        else:
+            mo = L.apply_mlp(lp["mlp"], xn, act=cfg.act, compute_dtype=cfg.cdt)
+        return x + mo, (ck, cv)
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], kv_cache[0], kv_cache[1]))
+    x = _norm(cfg)(params["final_norm"], x)
+    return _unembed(params, x, cfg)[:, 0], caches

@@ -1,0 +1,12 @@
+"""Optimisation substrate: AdamW (+ZeRO-1), Adafactor, schedules, grad compression."""
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.adafactor import adafactor_init, adafactor_update, AdafactorConfig
+from repro.optim.schedule import warmup_cosine, constant_lr
+from repro.optim.grad_compress import (compress_int8, decompress_int8,
+                                       compressed_psum, error_feedback_step)
+
+__all__ = ["adamw_init", "adamw_update", "AdamWConfig",
+           "adafactor_init", "adafactor_update", "AdafactorConfig",
+           "warmup_cosine", "constant_lr",
+           "compress_int8", "decompress_int8", "compressed_psum",
+           "error_feedback_step"]

@@ -1,0 +1,73 @@
+"""Adafactor (factored second moments) — the 480B-scale optimizer.
+
+For a (..., r, c) param the second moment is stored as row/col means
+(O(r+c) memory instead of O(r·c)); vectors fall back to full moments.
+No first moment (beta1=0 variant), matching the memory budget that makes
+arctic-480b trainable on a 256-chip v5e pod (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8          # beta2 exponent schedule: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor_init(params: Any) -> dict:
+    def init(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads: Any, state: dict, params: Any, lr: jax.Array,
+                     cfg: AdafactorConfig = AdafactorConfig()) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -cfg.decay)
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if _factored(p):
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            # denom broadcasts against vr[..., None]: add the trailing axis
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), cfg.eps)[..., None]
+            u = g * jax.lax.rsqrt(vr[..., None] / denom) * jax.lax.rsqrt(vc[..., None, :])
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            nv = beta2 * v["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(nv)
+            new_v = {"v": nv}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if cfg.weight_decay and p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}

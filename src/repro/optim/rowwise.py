@@ -1,0 +1,77 @@
+"""Rowwise-AdaGrad embedding updates + AdamW for dense params.
+
+The §Perf fix for DLRM-scale training. Two compounding problems with naive
+autodiff + AdamW on 188M-row tables:
+
+  1. the gather's VJP materialises a DENSE vocab×dim gradient (zeros init +
+     scatter-add): O(vocab) HBM traffic for a batch touching <0.1 % of rows;
+  2. AdamW reads+writes two fp32 moments per PARAMETER: ~386 GB/step of
+     optimizer traffic.
+
+The industry answer (FBGEMM/TorchRec/TPU embedding API), expressed in JAX:
+
+  * embedding rows are gathered OUTSIDE ``value_and_grad``; the loss is
+    differentiated w.r.t. the gathered rows, so table grads never exist in
+    dense form — per-step grad traffic is O(batch · dim);
+  * one AdaGrad accumulator scalar per ROW; updates scatter-add into the
+    donated table buffer in place (duplicate ids combined exactly via a
+    sort + segment-sum);
+  * everything that isn't a table keeps AdamW.
+
+See ``configs/steps.py::_recsys_rowwise_bundle`` for the step wiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RowwiseConfig:
+    lr_scale: float = 10.0     # AdaGrad wants a larger lr than Adam
+    eps: float = 1e-8
+
+
+def rowwise_init_table(table: jax.Array) -> jax.Array:
+    """Per-row accumulator."""
+    return jnp.zeros((table.shape[0],), jnp.float32)
+
+
+def combine_duplicate_rows(idx: jax.Array, g_rows: jax.Array
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Exactly combine gradient rows with equal ids.
+
+    idx: (n,) int32 (may repeat); g_rows: (n, E).
+    Returns (ids (n,), g_combined (n, E), valid (n,)) where only ``valid``
+    entries carry a (unique) id + summed gradient; the rest are padding.
+    """
+    order = jnp.argsort(idx)
+    sid = idx[order]
+    g = g_rows[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sid[1:] != sid[:-1]])
+    seg = jnp.cumsum(first) - 1
+    n = idx.shape[0]
+    g_comb = jax.ops.segment_sum(g, seg, num_segments=n)
+    ids = jax.ops.segment_max(sid, seg, num_segments=n)
+    valid = jnp.arange(n) < seg[-1] + 1
+    return jnp.where(valid, ids, 0), g_comb, valid
+
+
+def rowwise_adagrad_update(table: jax.Array, acc: jax.Array, idx: jax.Array,
+                           g_rows: jax.Array, lr: jax.Array,
+                           cfg: RowwiseConfig = RowwiseConfig()
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Sparse rowwise-AdaGrad: touch only the rows in ``idx``.
+
+    table: (V, E) (donated => in-place scatter); acc: (V,) rowwise state;
+    idx: (n,) touched rows; g_rows: (n, E) grads w.r.t. gathered rows.
+    """
+    ids, g, valid = combine_duplicate_rows(idx, g_rows.astype(jnp.float32))
+    row_g2 = (g ** 2).mean(axis=-1) * valid
+    acc_new_rows = acc[ids] + row_g2
+    acc = acc.at[ids].add(row_g2)
+    scale = (lr * cfg.lr_scale) * jax.lax.rsqrt(acc_new_rows + cfg.eps)
+    delta = (scale[:, None] * g) * valid[:, None]
+    return table.at[ids].add(-delta.astype(table.dtype)), acc

@@ -1,0 +1,8 @@
+"""Parallelism substrate: sharding rules, logical axes, collective helpers."""
+from repro.par.sharding import (
+    LOGICAL_AXES, ShardingRules, logical_to_physical, spec_for,
+    param_specs, named_shardings, data_spec, replicated,
+)
+
+__all__ = ["LOGICAL_AXES", "ShardingRules", "logical_to_physical", "spec_for",
+           "param_specs", "named_shardings", "data_spec", "replicated"]

@@ -1,0 +1,217 @@
+"""Path-based sharding rules with divisibility fallback.
+
+One engine drives every architecture on the same mesh: a rule proposes
+logical shardings for a param-tree path; each *clause group* is tried in
+order and the first group whose every (dim, axis) divides evenly is used.
+That is what lets smollm (9 heads) and arctic (56 heads, 128 experts)
+coexist on a 16-wide 'model' axis: smollm's attention falls through its
+head-sharded clause to a replicated fallback while its MLP/vocab dims still
+shard; arctic takes the expert-parallel clause.
+
+Logical axes:
+  * ``dp``  — data parallel: ('pod', 'data') when the mesh has a pod axis
+  * ``tp``  — tensor parallel: ('model',)
+  * ``ep``  — expert parallel: ('model',)   (same physical axis as tp —
+              an expert-sharded layer is *not* additionally TP-sharded)
+  * ``sp``  — sequence parallel: ('model',) for long-context KV/activations
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_AXES = ("dp", "tp", "ep", "sp")
+
+# A clause is (dim, logical_axis). A clause group is a tuple of clauses that
+# must all fit. A rule maps a path regex to an ordered list of clause groups.
+Clause = tuple[int, str]
+ClauseGroup = tuple[Clause, ...]
+
+
+def logical_to_physical(logical: str, mesh: Mesh) -> tuple[str, ...]:
+    names = mesh.axis_names
+    if logical == "dp":
+        return tuple(n for n in ("pod", "data") if n in names) or (names[0],)
+    if logical in ("tp", "ep", "sp"):
+        return ("model",) if "model" in names else ()
+    if logical == "fsdp":   # every mesh axis (huge embedding tables)
+        return tuple(names)
+    raise ValueError(f"unknown logical axis {logical}")
+
+
+def _axis_size(mesh: Mesh, phys: Sequence[str]) -> int:
+    size = 1
+    for p in phys:
+        size *= mesh.shape[p]
+    return size
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Ordered (regex, clause-groups) rules applied to '/'-joined tree paths."""
+
+    rules: list[tuple[str, list[ClauseGroup]]]
+
+    def spec(self, path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+        for pattern, groups in self.rules:
+            if re.search(pattern, path):
+                for group in groups:
+                    assign: dict[int, tuple[str, ...]] = {}
+                    ok = True
+                    for dim, logical in group:
+                        d = dim if dim >= 0 else len(shape) + dim
+                        phys = logical_to_physical(logical, mesh)
+                        if not phys or d >= len(shape) or d in assign:
+                            ok = False
+                            break
+                        if shape[d] % _axis_size(mesh, phys) != 0:
+                            ok = False
+                            break
+                        assign[d] = phys
+                    if ok and assign:
+                        parts: list[Any] = [None] * len(shape)
+                        for d, phys in assign.items():
+                            parts[d] = phys if len(phys) > 1 else phys[0]
+                        return P(*parts)
+                return P()  # matched a rule but nothing fits -> replicate
+        return P()
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def spec_for(tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """PartitionSpec tree for a pytree of arrays/ShapeDtypeStructs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rules.spec(_path_str(path), leaf.shape, mesh), tree)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    return spec_for(params_shape, mesh, rules)
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_spec(mesh: Mesh, ndim: int, *, batch_dim: int = 0,
+              extra: dict[int, str] | None = None) -> P:
+    """Batch-dim over dp; optional extra {dim: logical} (divisibility NOT
+    checked here — callers pass shapes they control)."""
+    parts: list[Any] = [None] * ndim
+    dp = logical_to_physical("dp", mesh)
+    parts[batch_dim] = dp if len(dp) > 1 else dp[0]
+    for d, logical in (extra or {}).items():
+        phys = logical_to_physical(logical, mesh)
+        if phys:
+            parts[d] = phys if len(phys) > 1 else phys[0]
+    return P(*parts)
+
+
+def replicated(ndim: int) -> P:
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Stock rule sets per model family
+# ---------------------------------------------------------------------------
+
+
+def lm_rules(moe: bool = False, moe_dp_dim: str = "ff") -> ShardingRules:
+    """2-D FSDP×TP (+ EP or per-expert-TP) for decoder LMs — MaxText-style.
+
+    Every weight matrix shards one dim over 'tp' (model axis) and, where it
+    divides, a second dim over 'dp' (data [+pod] axes) — ZeRO-3/FSDP
+    semantics via GSPMD: weights are all-gathered per layer, param/grad/
+    optimizer memory drops by |dp|. A 480B Arctic fits a 256-chip pod this
+    way; smollm falls through the same rules to mostly-replicated.
+
+    Stacked layers add a leading L dim, so in-layer dims shift by +1 —
+    rules use negative dims to stay layout-agnostic.
+    """
+    r: list[tuple[str, list[ClauseGroup]]] = [
+        # embeddings: vocab over tp, d_model over dp
+        (r"(^|/)embed$", [((-2, "tp"), (-1, "dp")), ((-2, "tp"),)]),
+        (r"(^|/)unembed$", [((-2, "tp"), (-1, "dp")), ((-2, "tp"),)]),
+        (r"pos_embed$", [()]),
+        # attention: fused head dim over tp, d_model over dp; wo transposed
+        (r"attn/w[qkv]/w$", [((-1, "tp"), (-2, "dp")), ((-1, "tp"),)]),
+        (r"attn/w[qkv]/b$", [((-1, "tp"),)]),
+        (r"attn/wo/w$", [((-2, "tp"), (-1, "dp")), ((-2, "tp"),)]),
+        # dense MLP: ff over tp, d_model over dp
+        (r"mlp/w[13]/w$", [((-1, "tp"), (-2, "dp")), ((-1, "tp"),)]),
+        (r"mlp/w2/w$", [((-2, "tp"), (-1, "dp")), ((-2, "tp"),)]),
+    ]
+    if moe:
+        if moe_dp_dim == "d_model":
+            # EP over tp + d_model over dp: the expert GEMMs contract (w1)
+            # or produce (w2) the dp-sharded dim, so the expert_in/out
+            # buffers stay group-sharded and only (E_loc,G_loc,C,ff) psums
+            # + (…,d) gathers cross dp — ~15x less than gathering the full
+            # dispatched activations over the ff-FSDP conflict (see
+            # EXPERIMENTS.md §Perf arctic log).
+            r += [
+                (r"moe/w[13]$", [((-3, "ep"), (-2, "dp")), ((-3, "ep"),),
+                                 ((-1, "tp"), (-2, "dp")), ((-1, "tp"),)]),
+                (r"moe/w2$", [((-3, "ep"), (-1, "dp")), ((-3, "ep"),),
+                              ((-2, "tp"), (-1, "dp")), ((-2, "tp"),)]),
+                (r"moe/router", [()]),
+            ]
+        else:
+            r += [
+                # experts: EP over tp + ff over dp; fallbacks degrade gracefully
+                (r"moe/w[13]$", [((-3, "ep"), (-1, "dp")), ((-3, "ep"),),
+                                 ((-1, "tp"), (-2, "dp")), ((-1, "tp"),)]),
+                (r"moe/w2$", [((-3, "ep"), (-2, "dp")), ((-3, "ep"),),
+                              ((-2, "tp"), (-1, "dp")), ((-2, "tp"),)]),
+                (r"moe/router", [()]),
+            ]
+    r.append((r".*", [()]))
+    return ShardingRules(r)
+
+
+def lm_rules_dp_only() -> ShardingRules:
+    """Pure data parallelism: params replicated (ZeRO-1 still dp-shards the
+    optimizer moments). The correct layout for models whose per-layer TP
+    all-reduces dwarf their compute (e.g. smollm-135m — §Perf cell 4)."""
+    return ShardingRules([(r".*", [()])])
+
+
+def biencoder_rules() -> ShardingRules:
+    base = lm_rules(moe=False).rules
+    return ShardingRules([(r"(^|/)proj/w$", [((-2, "tp"),)])] + base)
+
+
+def gnn_rules() -> ShardingRules:
+    # GNN params are small MLPs — replicate everything; parallelism lives in
+    # the edge/node data sharding.
+    return ShardingRules([(r".*", [()])])
+
+
+def recsys_rules() -> ShardingRules:
+    return ShardingRules([
+        # big embedding tables: rows FSDP-sharded over every mesh axis
+        # (e.g. DLRM's 188M rows x 128 => 375 MB/chip on 256 chips)
+        (r"tables/\d+$", [((0, "fsdp"),), ((0, "tp"),)]),
+        (r"(user|item)_embed$", [((0, "fsdp"),), ((0, "tp"),)]),
+        (r"first_order/\d+$", [((0, "fsdp"),), ((0, "tp"),)]),
+        # MLPs: modest — shard the wide hidden dims where divisible
+        (r"(bot_mlp|top_mlp|deep_mlp|user_tower|item_tower)/\d+/w$",
+         [((-1, "tp"),)]),
+        (r".*", [()]),
+    ])

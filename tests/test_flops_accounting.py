@@ -1,0 +1,82 @@
+"""Trip-count-aware cost accounting (launch/flops.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.flops import hlo_collectives, jaxpr_cost
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    c = jaxpr_cost(f, a, b)
+    assert c["flops"] == pytest.approx(2 * 64 * 32 * 16, rel=0.01)
+
+
+def test_scan_multiplies_body():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=8)
+        return c
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    c = jaxpr_cost(f, x, w)
+    base = 2 * 32 * 32 * 32
+    assert c["flops"] >= 8 * base           # 8 trips counted
+    assert c["flops"] < 8 * base * 1.5      # no runaway double counting
+
+
+def test_grad_includes_backward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    f = jaxpr_cost(loss, w, x)["flops"]
+    g = jaxpr_cost(jax.grad(loss), w, x)["flops"]
+    assert g > 2 * f   # bwd ≈ 2x fwd for a matmul
+
+
+def test_remat_recompute_counted():
+    def loss(w, x):
+        def blk(x):
+            return jnp.tanh(x @ w)
+        return jnp.sum(jax.checkpoint(blk)(x))
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    plain = jaxpr_cost(jax.grad(lambda w, x: jnp.sum(jnp.tanh(x @ w))), w, x)
+    remat = jaxpr_cost(jax.grad(loss), w, x)
+    assert remat["flops"] > plain["flops"]   # recompute shows up
+
+
+def test_hlo_collectives_while_multiplication():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",)) if len(jax.devices()) == 1 else None
+    if mesh is None:
+        pytest.skip("device layout")
+    # single-device: no real collectives; just verify the parser returns a
+    # well-formed structure on an arbitrary compiled program with a while
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2, None
+        c, _ = jax.lax.scan(body, x, None, length=5)
+        return c
+    compiled = jax.jit(f).lower(jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+    out = hlo_collectives(compiled.as_text())
+    assert "total_bytes" in out and out["total_bytes"] == 0
+
+
+def test_cell_flops_within_factor_of_model_estimate():
+    """smollm train: jaxpr flops within ~2-5x of 6ND (remat+attention extra)."""
+    import json, glob, os
+    arts = glob.glob("experiments/dryrun/smollm-135m__train_4k__pod.json")
+    if not arts:
+        pytest.skip("dry-run artifact not present")
+    r = json.load(open(arts[0]))
+    if r.get("status") != "ok":
+        pytest.skip("cell not ok")
+    ratio = r["accounting"]["global_flops"] / r["meta"]["model_flops"]
+    assert 1.0 < ratio < 6.0

@@ -1,0 +1,84 @@
+"""DenseIndex / ShardedDenseIndex / int8 quantisation."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, ShardedDenseIndex
+from repro.core.quantization import (dequantize_int8, quantization_error,
+                                     quantize_int8_per_dim)
+
+RNG = np.random.default_rng(7)
+
+
+def _data(n=2000, d=64):
+    D = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    Q = jnp.asarray(RNG.standard_normal((9, d)), jnp.float32)
+    return D, Q
+
+
+def test_exact_search_matches_bruteforce():
+    D, Q = _data()
+    idx = DenseIndex.build(D)
+    s, ids = idx.search(Q, k=10, block=300)
+    brute = np.asarray(Q) @ np.asarray(D).T
+    want_ids = np.argsort(-brute, axis=1)[:, :10]
+    assert (np.asarray(ids) == want_ids).all()
+    np.testing.assert_allclose(np.asarray(s),
+                               np.take_along_axis(brute, want_ids, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_size_invariance():
+    D, Q = _data(777)
+    a = DenseIndex.build(D).search(Q, k=7, block=100)
+    b = DenseIndex.build(D).search(Q, k=7, block=7777)
+    assert (np.asarray(a[1]) == np.asarray(b[1])).all()
+
+
+def test_pallas_backend_matches_jnp():
+    D, Q = _data(500, 32)
+    a = DenseIndex.build(D, backend="jnp").search(Q, k=10)
+    b = DenseIndex.build(D, backend="pallas").search(Q, k=10)
+    for x in range(Q.shape[0]):
+        assert set(np.asarray(a[1])[x].tolist()) == set(np.asarray(b[1])[x].tolist())
+
+
+def test_int8_index_recall():
+    D, Q = _data(3000, 64)
+    full = DenseIndex.build(D)
+    q8 = DenseIndex.build(D, quantize_int8=True)
+    assert q8.nbytes < full.nbytes / 3.5
+    _, ids_f = full.search(Q, k=10)
+    _, ids_q = q8.search(Q, k=10)
+    # int8 keeps high top-10 overlap
+    overlap = np.mean([len(set(np.asarray(ids_f)[i]) & set(np.asarray(ids_q)[i])) / 10
+                       for i in range(Q.shape[0])])
+    assert overlap > 0.8
+
+
+def test_quantization_roundtrip_error_small():
+    D, _ = _data(1000, 32)
+    assert float(quantization_error(D)) < 0.01
+    q, s = quantize_int8_per_dim(D)
+    assert q.dtype == jnp.int8
+    rec = dequantize_int8(q, s)
+    assert float(jnp.abs(rec - D).max()) < float(jnp.abs(D).max()) * 0.02
+
+
+def test_sharded_index_single_device_mesh():
+    # 1-device mesh exercises the shard_map merge path end to end
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    D, Q = _data(1024, 32)
+    sidx = ShardedDenseIndex.build(D, mesh)
+    s, ids = sidx.search(Q, k=10)
+    _, want = DenseIndex.build(D).search(Q, k=10)
+    assert (np.asarray(ids) == np.asarray(want)).all()
+
+
+def test_sharded_index_pads_uneven_rows():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    D, Q = _data(1000, 16)   # 1000 rows, any padding must not surface
+    sidx = ShardedDenseIndex.build(D, mesh)
+    s, ids = sidx.search(Q, k=5)
+    assert int(ids.max()) < 1000

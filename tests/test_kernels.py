@@ -1,0 +1,139 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(64, 16), (257, 64), (1000, 96), (1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_oracle(n, d, dtype):
+    D = _rand((n, d), dtype)
+    got = ops.gram(D, block_rows=128, interpret=True)
+    want = ref.gram_ref(D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=1e-2)
+
+
+def test_gram_block_size_invariance():
+    D = _rand((500, 32), jnp.float32)
+    a = ops.gram(D, block_rows=64, interpret=True)
+    b = ops.gram(D, block_rows=500, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-3)
+
+
+def test_gram_psd():
+    D = _rand((300, 24), jnp.float32)
+    G = np.asarray(ops.gram(D, interpret=True))
+    evals = np.linalg.eigvalsh(G)
+    assert evals.min() > -1e-3
+    np.testing.assert_allclose(G, G.T, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# topk_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,B,k,bn", [
+    (128, 16, 1, 5, 64),
+    (1000, 64, 8, 10, 256),
+    (555, 48, 4, 13, 128),     # non-divisible block
+    (2048, 128, 16, 100, 512), # k large
+])
+def test_topk_matches_oracle(n, m, B, k, bn):
+    D = _rand((n, m), jnp.float32)
+    Q = _rand((B, m), jnp.float32)
+    s1, i1 = ops.topk_score(D, Q, k=k, block_n=bn, interpret=True)
+    s2, i2 = ref.topk_score_ref(D, Q, k=k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+    # discrete-boundary check: sets must match even if tie order differs
+    for b in range(B):
+        assert set(np.asarray(i1)[b].tolist()) == set(np.asarray(i2)[b].tolist())
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_topk_dtypes(dtype):
+    D = _rand((400, 32), dtype)
+    Q = _rand((4, 32), jnp.float32)
+    s1, i1 = ops.topk_score(D, Q, k=10, block_n=128, interpret=True)
+    s2, i2 = ref.topk_score_ref(D, Q, k=10)
+    assert (np.asarray(i1) == np.asarray(i2)).mean() > 0.95
+
+
+def test_topk_k_exceeding_block():
+    # k larger than one block's rows: merge must span blocks correctly.
+    D = _rand((96, 8), jnp.float32)
+    Q = _rand((2, 8), jnp.float32)
+    s1, i1 = ops.topk_score(D, Q, k=40, block_n=32, interpret=True)
+    s2, i2 = ref.topk_score_ref(D, Q, k=40)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_topk_sorted_descending():
+    D = _rand((300, 16), jnp.float32)
+    Q = _rand((3, 16), jnp.float32)
+    s, _ = ops.topk_score(D, Q, k=20, block_n=64, interpret=True)
+    s = np.asarray(s)
+    assert (np.diff(s, axis=-1) <= 1e-6).all()
+
+
+def test_topk_duplicate_scores_tiebreak():
+    # identical rows => tied scores; ids must be the smallest ones (top_k semantics)
+    row = RNG.standard_normal(16).astype(np.float32)
+    D = jnp.asarray(np.tile(row, (64, 1)))
+    Q = jnp.asarray(row[None, :])
+    _, ids = ops.topk_score(D, Q, k=8, block_n=16, interpret=True)
+    assert set(np.asarray(ids)[0].tolist()) == set(range(8))
+
+
+# ---------------------------------------------------------------------------
+# pca_project (+ quant epilogue)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,m", [(100, 32, 8), (513, 96, 48), (1024, 128, 64)])
+def test_project_matches_oracle(n, d, m):
+    D = _rand((n, d), jnp.float32)
+    W = _rand((d, m), jnp.float32)
+    got = ops.pca_project(D, W, block_rows=128, interpret=True)
+    want = ref.pca_project_ref(D, W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_project_quant_matches_oracle():
+    D = _rand((500, 64), jnp.float32)
+    W = _rand((64, 32), jnp.float32)
+    t = np.asarray(ref.pca_project_ref(D, W))
+    scale = jnp.asarray(np.abs(t).max(0) / 127.0)
+    got = np.asarray(ops.pca_project_quant(D, W, scale, block_rows=128, interpret=True))
+    want = np.asarray(ref.pca_project_quant_ref(D, W, scale))
+    # rounding boundaries may flip +-1 ulp of int8 on a tiny fraction
+    assert (got == want).mean() > 0.999
+    assert np.abs(got.astype(np.int32) - want.astype(np.int32)).max() <= 1
+    assert got.dtype == np.int8
+
+
+def test_project_quant_roundtrip_error_bounded():
+    D = _rand((400, 48), jnp.float32)
+    W = np.linalg.qr(RNG.standard_normal((48, 48)))[0].astype(np.float32)
+    W = jnp.asarray(W[:, :24])
+    t = np.asarray(ref.pca_project_ref(D, W))
+    scale = jnp.asarray(np.abs(t).max(0) / 127.0)
+    q = np.asarray(ops.pca_project_quant(D, W, scale, interpret=True))
+    rec = q.astype(np.float32) * np.asarray(scale)[None, :]
+    rel = np.linalg.norm(rec - t) / np.linalg.norm(t)
+    assert rel < 0.01  # int8 symmetric ~ <1% Frobenius error

@@ -1,0 +1,62 @@
+"""Index maintenance: incremental adds + drift-triggered refit policy."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.maintenance import IndexUpdater, captured_energy
+from repro.data.synthetic import make_corpus, make_ood_corpus
+
+
+def _corpus(seed=0, n=2000, domain_seed=None):
+    D, _ = make_corpus("tasb", n_docs=n, d=96, seed=seed,
+                       domain_seed=domain_seed)
+    return jnp.asarray(D)
+
+
+def test_add_documents_searchable():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5)
+    n0 = up.index.n
+    new = _corpus(seed=0, n=200, domain_seed=1)[:100]
+    up.add_documents(new)
+    assert up.index.n == n0 + 100
+    # a newly added doc retrieves itself
+    _, ids = up.search(new[3][None, :], k=5)
+    assert n0 + 3 in np.asarray(ids)[0].tolist()
+
+
+def test_add_documents_int8_path():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True)
+    up.add_documents(_corpus(seed=0, n=120, domain_seed=2)[:50])
+    assert up.index.vectors.dtype == jnp.int8
+    s, ids = up.search(D[:2], k=5)
+    assert np.isfinite(np.asarray(s)).all()
+
+
+def test_drift_low_in_domain_high_out_of_domain():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5)
+    in_dom = _corpus(seed=0, n=500, domain_seed=3)  # same encoder basis
+    assert up.drift_score(in_dom) > 0.85
+    # totally different basis (different encoder seed => rotated space)
+    ood, _ = make_corpus("tasb", n_docs=500, d=96, seed=99)
+    assert up.drift_score(jnp.asarray(ood)) < up.drift_score(in_dom)
+
+
+def test_refit_restores_energy():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5)
+    shifted, _ = make_corpus("tasb", n_docs=2000, d=96, seed=99)
+    shifted = jnp.asarray(shifted)
+    before = up.drift_score(shifted)
+    up.refit(shifted)
+    after = up.drift_score(shifted)
+    assert after > before
+    assert abs(up.drift_score(shifted) - 1.0) < 0.05
+
+
+def test_captured_energy_bounds():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5)
+    e = captured_energy(D, up.pruner)
+    assert 0.0 < e <= 1.0

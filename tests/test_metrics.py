@@ -1,0 +1,73 @@
+"""IR metric correctness against hand-computed values."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import (average_precision, dcg, evaluate_run,
+                                mean_metrics, mrr_at_k, ndcg_at_k,
+                                recall_at_k, wilcoxon_significant)
+
+
+def test_dcg_hand_computed():
+    # grades [3, 2, 0]: (2^3-1)/log2(2) + (2^2-1)/log2(3) + 0
+    g = np.array([3.0, 2.0, 0.0])
+    want = 7.0 / 1.0 + 3.0 / np.log2(3.0)
+    assert dcg(g) == pytest.approx(want)
+
+
+def test_ndcg_perfect_ranking_is_one():
+    qrel = {1: 3, 2: 2, 3: 1}
+    assert ndcg_at_k([1, 2, 3], qrel, k=10) == pytest.approx(1.0)
+
+
+def test_ndcg_worst_ranking_below_one():
+    qrel = {1: 3, 2: 2, 3: 1, 7: 0}
+    assert ndcg_at_k([7, 3, 2, 1], qrel, k=10) < 1.0
+
+
+def test_average_precision_hand_computed():
+    # relevant docs: 1, 3; ranking [1, 2, 3] -> (1/1 + 2/3)/2
+    qrel = {1: 1, 3: 1}
+    assert average_precision([1, 2, 3], qrel) == pytest.approx((1 + 2 / 3) / 2)
+
+
+def test_mrr():
+    qrel = {5: 1}
+    assert mrr_at_k([9, 8, 5], qrel, k=10) == pytest.approx(1 / 3)
+    assert mrr_at_k([9, 8, 7], qrel, k=3) == 0.0
+
+
+def test_recall():
+    qrel = {1: 1, 2: 1, 3: 1, 4: 1}
+    assert recall_at_k([1, 2, 9, 9, 9], qrel, k=5) == pytest.approx(0.5)
+
+
+def test_evaluate_run_missing_query_scores_zero():
+    qrels = {0: {1: 1}, 1: {2: 1}}
+    run = {0: [1]}
+    pq = evaluate_run(run, qrels)
+    assert pq["nDCG@10"][0] == pytest.approx(1.0)
+    assert pq["nDCG@10"][1] == 0.0
+    m = mean_metrics(pq)
+    assert m["nDCG@10"] == pytest.approx(0.5)
+
+
+def test_wilcoxon_identical_not_significant():
+    a = np.array([0.5, 0.6, 0.7, 0.4] * 5)
+    sig, p = wilcoxon_significant(a, a.copy())
+    assert not sig and p == 1.0
+
+
+def test_wilcoxon_detects_consistent_drop():
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0.4, 0.9, 50)
+    b = a - 0.05 + rng.normal(0, 0.005, 50)
+    sig, p = wilcoxon_significant(a, b)
+    assert sig and p < 0.01
+
+
+def test_wilcoxon_noise_not_significant():
+    rng = np.random.default_rng(1)
+    a = rng.uniform(0.4, 0.9, 30)
+    b = a + rng.normal(0, 0.01, 30)  # symmetric noise
+    sig, p = wilcoxon_significant(a, b)
+    assert p > 0.01 or not sig

@@ -1,0 +1,157 @@
+"""LM transformer: attention modes, MoE routing, decode consistency."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as M
+from repro.models.layers import blocked_attention, dense_attention
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      decode_step_sliding, forward_hidden,
+                                      forward_train, init_lm, prefill,
+                                      _unembed)
+
+CFG = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=128, vocab=256, compute_dtype="float32",
+                        remat=False)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def test_train_loss_and_grads_finite(lm):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 256)
+    labels = jnp.roll(toks, -1, 1)
+    loss, grads = jax.value_and_grad(forward_train)(lm, toks, labels, CFG)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+def test_masked_labels_ignored(lm):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    labels = jnp.roll(toks, -1, 1)
+    l1 = forward_train(lm, toks, labels, CFG)
+    labels_masked = labels.at[:, -4:].set(-1)
+    l2 = forward_train(lm, toks, labels_masked, CFG)
+    assert float(l1) != pytest.approx(float(l2))
+
+
+def test_decode_matches_full_forward(lm):
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 10), 0, 256)
+    h, _ = forward_hidden(lm, toks, CFG)
+    full = _unembed(lm, h, CFG)
+    _, cache = prefill(lm, toks[:, :9], CFG, cache_len=10)
+    lg, _ = decode_step(lm, cache, toks[:, 9], jnp.int32(9), CFG)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 9]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_causality(lm):
+    """Future tokens must not affect current logits."""
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 12), 0, 256)
+    h1, _ = forward_hidden(lm, toks, CFG)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 7) % 256)
+    h2, _ = forward_hidden(lm, toks2, CFG)
+    np.testing.assert_allclose(np.asarray(h1[:, :-1]), np.asarray(h2[:, :-1]),
+                               atol=1e-5)
+
+
+def test_sliding_window_restricts_context():
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab=128, sliding_window=4,
+                            compute_dtype="float32", remat=False)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 128)
+    h1, _ = forward_hidden(p, toks, cfg)
+    # changing token 0 must not affect position 10 (outside window 4)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 3) % 128)
+    h2, _ = forward_hidden(p, toks2, cfg)
+    np.testing.assert_allclose(np.asarray(h1[:, 10:]), np.asarray(h2[:, 10:]),
+                               atol=1e-5)
+
+
+def test_sliding_decode_rolling_buffer_matches_static():
+    cfg = TransformerConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab=128, sliding_window=8,
+                            compute_dtype="float32", remat=False)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    S = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S + 1), 0, 128)
+    h, _ = forward_hidden(p, toks, cfg)
+    want = _unembed(p, h, cfg)[:, S]
+    # roll tokens through the W-slot rolling buffer
+    W = cfg.sliding_window
+    kv = (jnp.zeros((2, 1, W, 2, 16)), jnp.zeros((2, 1, W, 2, 16)))
+    for pos in range(S + 1):
+        lg, kv = decode_step_sliding(p, kv, toks[:, pos], jnp.int32(pos), cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(want), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_moe_forward_and_aux():
+    cfg = TransformerConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab=128, n_experts=4, top_k=2,
+                            compute_dtype="float32", remat=False,
+                            moe_group_size=32)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 128)
+    loss = forward_train(p, toks, jnp.roll(toks, -1, 1), cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_moe_top1_vs_topk_capacity():
+    key = jax.random.PRNGKey(0)
+    p = M.init_moe(key, 16, 32, 4)
+    x = jax.random.normal(key, (2, 64, 16))
+    y1, aux1 = M.apply_moe(p, x, n_experts=4, top_k=1, group_size=32,
+                           compute_dtype=jnp.float32)
+    y2, aux2 = M.apply_moe(p, x, n_experts=4, top_k=2, group_size=32,
+                           compute_dtype=jnp.float32)
+    assert y1.shape == x.shape and y2.shape == x.shape
+    assert np.isfinite(np.asarray(y1)).all() and np.isfinite(np.asarray(y2)).all()
+    assert float(aux1) > 0 and float(aux2) > 0
+
+
+def test_moe_capacity_drops_renormalise():
+    """With a tiny capacity factor most tokens overflow; output stays finite
+    and dropped tokens contribute zero (not NaN)."""
+    key = jax.random.PRNGKey(0)
+    p = M.init_moe(key, 16, 32, 4)
+    x = jax.random.normal(key, (1, 64, 16))
+    y, _ = M.apply_moe(p, x, n_experts=4, top_k=2, capacity_factor=0.1,
+                       group_size=64, compute_dtype=jnp.float32)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_dense_residual_arctic_style():
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab=128, n_experts=4, top_k=2,
+                            dense_residual=True, residual_d_ff=48,
+                            compute_dtype="float32", remat=False,
+                            moe_group_size=32)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    assert "mlp" in jax.tree_util.tree_map(lambda x: x, p["layers"]).keys() \
+        or "mlp" in p["layers"]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 128)
+    h, _ = forward_hidden(p, toks, cfg)
+    assert np.isfinite(np.asarray(h)).all()
+
+
+def test_param_count_formula_matches_actual():
+    p = init_lm(jax.random.PRNGKey(0), CFG)
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    assert abs(actual - CFG.param_count()) / actual < 0.02
+
+
+def test_blocked_attention_gqa_parity():
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 64, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 2, 16))
+    pos = jnp.arange(64)
+    a = dense_attention(q, k, v, pos, pos, "causal")
+    b = blocked_attention(q, k, v, pos, pos, "causal", q_chunk=16, k_chunk=24)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-5)

@@ -1,0 +1,211 @@
+"""GNN, recsys, bi-encoder model behaviour."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import recsys as R
+from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
+                                    init_biencoder)
+from repro.models.gnn import GNNConfig, forward as gnn_fwd, init_gnn, mse_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- GNN ----------------------------------------------------------------------
+
+GCFG = GNNConfig(n_layers=2, d_hidden=16, d_in=8, d_edge_in=4, d_out=8,
+                 compute_dtype="float32", remat=False)
+
+
+def _graph(n=40, e=160, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((n, 8)), jnp.float32),
+            jnp.asarray(rng.standard_normal((e, 4)), jnp.float32),
+            jnp.asarray(rng.integers(0, n, (2, e)), jnp.int32))
+
+
+def test_gnn_shapes_and_finite():
+    p = init_gnn(KEY, GCFG)
+    nodes, edges, ei = _graph()
+    out = gnn_fwd(p, nodes, edges, ei, GCFG)
+    assert out.shape == (40, 8)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_gnn_message_locality():
+    """An isolated node's output depends only on its own features."""
+    p = init_gnn(KEY, GCFG)
+    nodes, edges, ei = _graph()
+    ei = jnp.where(ei == 0, 1, ei)   # disconnect node 0
+    out1 = gnn_fwd(p, nodes, edges, ei, GCFG)
+    nodes2 = nodes.at[5].set(nodes[5] + 1.0)   # perturb some other node
+    out2 = gnn_fwd(p, nodes2, edges, ei, GCFG)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]),
+                               atol=1e-5)
+
+
+def test_gnn_edge_mask_zeroes_padding():
+    p = init_gnn(KEY, GCFG)
+    nodes, edges, ei = _graph(e=100)
+    # pad 60 fake edges pointing at node 3, then mask them
+    pad_ei = jnp.concatenate([ei, jnp.full((2, 60), 3, jnp.int32)], axis=1)
+    pad_edges = jnp.concatenate([edges, jnp.ones((60, 4))], axis=0)
+    mask = jnp.concatenate([jnp.ones(100), jnp.zeros(60)])
+    out_masked = gnn_fwd(p, nodes, pad_edges, pad_ei, GCFG, edge_mask=mask)
+    out_ref = gnn_fwd(p, nodes, edges, ei, GCFG,
+                      edge_mask=jnp.ones(100))
+    np.testing.assert_allclose(np.asarray(out_masked), np.asarray(out_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gnn_aggregators():
+    for agg in ("sum", "mean", "max"):
+        cfg = GNNConfig(n_layers=1, d_hidden=8, d_in=4, d_edge_in=4, d_out=4,
+                        aggregator=agg, compute_dtype="float32", remat=False)
+        p = init_gnn(KEY, cfg)
+        rng = np.random.default_rng(0)
+        out = gnn_fwd(p, jnp.asarray(rng.standard_normal((10, 4)), jnp.float32),
+                      jnp.asarray(rng.standard_normal((30, 4)), jnp.float32),
+                      jnp.asarray(rng.integers(0, 10, (2, 30)), jnp.int32), cfg)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_gnn_grads_flow():
+    p = init_gnn(KEY, GCFG)
+    nodes, edges, ei = _graph()
+    batch = dict(nodes=nodes, edges=edges, edge_index=ei,
+                 targets=jnp.zeros((40, 8)))
+    g = jax.grad(mse_loss)(p, batch, GCFG)
+    norms = [float(jnp.abs(x).max()) for x in jax.tree.leaves(g)]
+    assert all(np.isfinite(norms)) and max(norms) > 0
+
+
+# -- RecSys -------------------------------------------------------------------
+
+def test_embedding_bag_single_and_multi_hot():
+    table = jnp.arange(20, dtype=jnp.float32).reshape(10, 2)
+    single = R.embedding_bag(table, jnp.array([0, 3]))
+    np.testing.assert_allclose(np.asarray(single), [[0, 1], [6, 7]])
+    multi = R.embedding_bag(table, jnp.array([[0, 2], [4, 4]]), combiner="sum")
+    np.testing.assert_allclose(np.asarray(multi), [[4, 6], [16, 18]])
+    mean = R.embedding_bag(table, jnp.array([[0, 2]]), combiner="mean")
+    np.testing.assert_allclose(np.asarray(mean), [[2, 3]])
+
+
+def test_sharded_embedding_bag_matches_plain():
+    mesh = jax.make_mesh((1,), ("model",))
+    table = jnp.asarray(np.random.default_rng(0).standard_normal((64, 8)),
+                        jnp.float32)
+    idx = jnp.asarray([3, 9, 63, 0], jnp.int32)
+    from jax.sharding import PartitionSpec as P
+
+    fn = jax.shard_map(
+        lambda t, i: R.sharded_embedding_bag(t, i, axis="model", vocab=64),
+        mesh=mesh, in_specs=(P("model", None), P()), out_specs=P())
+    got = fn(table, idx)
+    want = R.embedding_bag(table, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_fm_identity():
+    """FM trick equals explicit pairwise sum."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.standard_normal((3, 5, 4)), jnp.float32)
+    got = R.fm_interaction(v)
+    want = np.zeros(3)
+    vn = np.asarray(v)
+    for i in range(5):
+        for j in range(i + 1, 5):
+            want += (vn[:, i] * vn[:, j]).sum(-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+
+def test_dot_interaction_shape():
+    v = jnp.ones((2, 4, 8))
+    out = R.dot_interaction(v)
+    assert out.shape == (2, 6)   # 4 choose 2
+
+
+def test_ctr_models_train_and_descend():
+    rng = np.random.default_rng(0)
+    for kind, cfg in [
+        ("dlrm", R.RecsysConfig(kind="dlrm", vocab_sizes=(64, 32), embed_dim=8,
+                                n_dense=4, bot_mlp=(16, 8), top_mlp=(16, 1))),
+        ("deepfm", R.RecsysConfig(kind="deepfm", vocab_sizes=(64, 32, 16),
+                                  embed_dim=6, deep_mlp=(16, 16))),
+        ("autoint", R.RecsysConfig(kind="autoint", vocab_sizes=(64, 32, 16),
+                                   embed_dim=8, n_attn_layers=2, n_heads=2,
+                                   d_attn=4)),
+    ]:
+        p = R.init_recsys(KEY, cfg)
+        batch = {"sparse": jnp.asarray(rng.integers(0, 16, (64, cfg.n_sparse)),
+                                       jnp.int32),
+                 "label": jnp.asarray(rng.random(64) < 0.3, jnp.float32)}
+        if kind == "dlrm":
+            batch["dense"] = jnp.asarray(rng.standard_normal((64, 4)), jnp.float32)
+        loss0 = float(R.bce_loss(p, batch, cfg))
+        # a few SGD steps must reduce loss on a fixed batch
+        for _ in range(20):
+            g = jax.grad(R.bce_loss)(p, batch, cfg)
+            p = jax.tree.map(lambda w, gw: w - 0.1 * gw, p, g)
+        loss1 = float(R.bce_loss(p, batch, cfg))
+        assert loss1 < loss0, kind
+
+
+def test_two_tower_retrieval_end_to_end():
+    cfg = R.RecsysConfig(kind="two_tower", embed_dim=16, tower_mlp=(32, 16),
+                         user_vocab=128, item_vocab=256)
+    p = R.init_recsys(KEY, cfg)
+    items = R.item_embedding(p, jnp.arange(256))
+    assert items.shape == (256, 16)
+    s, ids = R.score_candidates(p, jnp.array([5, 9]), items, k=20)
+    assert s.shape == (2, 20)
+    # scores sorted, ids valid
+    assert (np.diff(np.asarray(s), axis=1) <= 1e-6).all()
+    assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < 256).all()
+
+
+def test_ctr_retrieval_scores_broadcast():
+    cfg = R.RecsysConfig(kind="deepfm", vocab_sizes=(64, 32, 16, 16),
+                         embed_dim=6, deep_mlp=(16,))
+    p = R.init_recsys(KEY, cfg)
+    fu, fi = R.ctr_user_item_split(cfg)
+    user = {"sparse": jnp.zeros((1, fu), jnp.int32)}
+    cand = jnp.asarray(np.random.default_rng(0).integers(0, 16, (100, fi)),
+                       jnp.int32)
+    scores = R.ctr_retrieval_scores(p, user, cand, cfg)
+    assert scores.shape == (100,)
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+# -- BiEncoder ---------------------------------------------------------------
+
+BCFG = BiEncoderConfig(n_layers=2, d_model=32, n_heads=2, d_ff=64, vocab=128,
+                       embed_dim=32, max_len=32, compute_dtype="float32",
+                       remat=False)
+
+
+def test_encode_normalised_and_mask_sensitive():
+    p = init_biencoder(KEY, BCFG)
+    toks = jax.random.randint(KEY, (4, 16), 0, 128)
+    mask = jnp.ones((4, 16), jnp.int32)
+    emb = encode(p, toks, mask, BCFG)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(emb), axis=1), 1.0,
+                               rtol=1e-4)
+    mask2 = mask.at[:, 8:].set(0)
+    emb2 = encode(p, toks, mask2, BCFG)
+    assert float(jnp.abs(emb - emb2).max()) > 1e-4
+
+
+def test_contrastive_training_descends():
+    from repro.data.tokens import pair_batch
+    p = init_biencoder(KEY, BCFG)
+    b = {k: jnp.asarray(v) for k, v in
+         pair_batch(0, 0, batch=16, seq_len=12, vocab=128).items()}
+    l0 = float(contrastive_loss(p, b, BCFG))
+    for _ in range(10):
+        g = jax.grad(contrastive_loss)(p, b, BCFG)
+        p = jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g)
+    l1 = float(contrastive_loss(p, b, BCFG))
+    assert l1 < l0

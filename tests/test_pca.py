@@ -1,0 +1,166 @@
+"""PCA core: unit tests + hypothesis property tests on the paper's invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (fit_pca, fit_pca_streaming, gram, transform,
+                        transform_query, inverse_transform, m_from_cutoff,
+                        cutoff_from_m, m_for_variance,
+                        explained_variance_ratio, save_pca, load_pca)
+
+RNG = np.random.default_rng(0)
+
+
+def _corpus(n=500, d=32, rank=8, noise=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    Z = rng.standard_normal((n, rank))
+    F = np.linalg.qr(rng.standard_normal((d, rank)))[0]
+    return jnp.asarray((Z @ F.T + noise * rng.standard_normal((n, d))),
+                       dtype=jnp.float32)
+
+
+# -- unit ---------------------------------------------------------------------
+
+def test_gram_matches_naive():
+    D = _corpus()
+    np.testing.assert_allclose(np.asarray(gram(D, block_rows=128)),
+                               np.asarray(D).T @ np.asarray(D),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_eigh_descending_and_orthonormal():
+    state = fit_pca(_corpus())
+    ev = np.asarray(state.eigenvalues)
+    assert (np.diff(ev) <= 1e-4).all()
+    W = np.asarray(state.components)
+    np.testing.assert_allclose(W.T @ W, np.eye(W.shape[0]), atol=1e-4)
+
+
+def test_full_rotation_preserves_scores():
+    """Key paper identity: (DW)(Wᵀq) == Dq exactly when m = d."""
+    D = _corpus()
+    Q = jnp.asarray(RNG.standard_normal((7, D.shape[1])), jnp.float32)
+    state = fit_pca(D)
+    T = transform(D, state)
+    Qt = transform(Q, state)
+    np.testing.assert_allclose(np.asarray(T @ Qt.T), np.asarray(D @ Q.T),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_streaming_matches_batch():
+    D = _corpus(n=600)
+    s1 = fit_pca(D)
+    s2 = fit_pca_streaming([D[:200], D[200:350], D[350:]])
+    np.testing.assert_allclose(np.asarray(s1.eigenvalues),
+                               np.asarray(s2.eigenvalues), rtol=1e-3, atol=1e-4)
+    # eigenvectors match up to sign
+    dots = np.abs(np.sum(np.asarray(s1.components) * np.asarray(s2.components),
+                         axis=0))
+    assert (dots[:8] > 0.99).all()   # top components (well-separated)
+
+
+def test_low_rank_corpus_truncation_is_lossless():
+    D = _corpus(rank=8, noise=0.0)
+    state = fit_pca(D)
+    T8 = transform(D, state, m=8)
+    rec = T8 @ state.components[:, :8].T
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(D), atol=1e-3)
+
+
+def test_centered_variant():
+    D = _corpus() + 5.0   # large mean offset
+    s = fit_pca(D, center=True)
+    assert np.abs(np.asarray(s.mean)).mean() > 1.0
+    T = transform(D, s)
+    # centred projection has ~zero mean
+    assert abs(float(T.mean())) < 0.1
+
+
+def test_cutoff_math():
+    assert m_from_cutoff(768, 0.5) == 384
+    assert m_from_cutoff(768, 0.25) == 576
+    assert m_from_cutoff(768, 0.75) == 192
+    assert cutoff_from_m(768, 384) == pytest.approx(0.5)
+    with pytest.raises(ValueError):
+        m_from_cutoff(768, 1.0)
+
+
+def test_m_for_variance():
+    D = _corpus(rank=8, noise=0.0)
+    s = fit_pca(D)
+    assert m_for_variance(s, 0.999) <= 9
+
+
+def test_save_load_roundtrip(tmp_path):
+    s = fit_pca(_corpus())
+    p = str(tmp_path / "pca.npz")
+    save_pca(p, s)
+    s2 = load_pca(p)
+    np.testing.assert_array_equal(np.asarray(s.components),
+                                  np.asarray(s2.components))
+    assert s2.centered == s.centered
+
+
+# -- hypothesis property tests -------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(20, 200), d=st.integers(4, 48),
+       seed=st.integers(0, 1000))
+def test_property_eigenvalues_nonneg_sum_to_trace(n, d, seed):
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    s = fit_pca(D)
+    ev = np.asarray(s.eigenvalues, np.float64)
+    assert (ev >= -1e-3).all()
+    trace = float(np.trace(np.asarray(D, np.float64).T @ np.asarray(D, np.float64)))
+    assert np.isclose(ev.sum(), trace, rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(6, 40), m_frac=st.floats(0.2, 0.9),
+       seed=st.integers(0, 1000))
+def test_property_projection_norm_never_increases(d, m_frac, seed):
+    """||W_mᵀ x|| <= ||x||: orthogonal projection is a contraction."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((100, d)), jnp.float32)
+    s = fit_pca(D)
+    m = max(1, int(d * m_frac))
+    X = jnp.asarray(rng.standard_normal((17, d)), jnp.float32)
+    T = transform(X, s, m)
+    assert (np.linalg.norm(np.asarray(T), axis=1)
+            <= np.linalg.norm(np.asarray(X), axis=1) + 1e-3).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), m=st.integers(1, 16))
+def test_property_truncation_error_monotone(seed, m):
+    """Reconstruction error is non-increasing in m (Eckart–Young)."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((80, 16)), jnp.float32)
+    s = fit_pca(D)
+
+    def err(mm):
+        T = transform(D, s, mm)
+        rec = inverse_transform(T, s)
+        return float(jnp.linalg.norm(rec - D))
+
+    if m < 16:
+        assert err(m) >= err(m + 1) - 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_query_doc_symmetry(seed):
+    """Scores via transformed docs+queries == scores in truncated space either way."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((60, 24)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((24,)), jnp.float32)
+    s = fit_pca(D)
+    m = 12
+    s1 = transform(D, s, m) @ transform_query(q, s, m)
+    W = s.components[:, :m]
+    s2 = (D @ W) @ (W.T @ q)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3,
+                               atol=1e-4)

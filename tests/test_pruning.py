@@ -1,0 +1,104 @@
+"""StaticPruner end-to-end behaviour incl. the paper's RQ claims in miniature."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+from repro.core.metrics import evaluate_run, mean_metrics
+from repro.data.synthetic import make_dataset, make_ood_corpus
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("tasb", n_docs=4000, d=128, seed=0, query_sets=("dl19",))
+
+
+def _ndcg(D, Q, qrels, pruner=None):
+    if pruner is not None:
+        D = pruner.prune_index(D)
+        Q = pruner.transform_queries(Q)
+    _, ids = DenseIndex.build(D).search(Q, k=50)
+    run = {i: list(map(int, np.asarray(ids)[i])) for i in range(Q.shape[0])}
+    return mean_metrics(evaluate_run(run, qrels))["nDCG@10"]
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        StaticPruner()
+    with pytest.raises(ValueError):
+        StaticPruner(cutoff=0.5, m=10)
+    with pytest.raises(RuntimeError):
+        StaticPruner(cutoff=0.5).kept_dims
+
+
+def test_rq1_pruning_50pct_small_loss(ds):
+    D = jnp.asarray(ds.docs)
+    Q = jnp.asarray(ds.queries["dl19"])
+    base = _ndcg(D, Q, ds.qrels["dl19"])
+    pr = StaticPruner(cutoff=0.5).fit(D)
+    pruned = _ndcg(D, Q, ds.qrels["dl19"], pr)
+    assert pr.kept_dims == 64
+    assert pruned > base * 0.9   # paper: <=5% loss at 50% on TAS-B-like
+
+def test_rq2_out_of_domain_transfer(ds):
+    D = jnp.asarray(ds.docs)
+    Q = jnp.asarray(ds.queries["dl19"])
+    ood = jnp.asarray(make_ood_corpus("tasb", n_docs=4000, d=128))
+    pr = StaticPruner(cutoff=0.5).fit(ood)          # fit on DIFFERENT corpus
+    pruned = _ndcg(D, Q, ds.qrels["dl19"], pr)
+    base = _ndcg(D, Q, ds.qrels["dl19"])
+    assert pruned > base * 0.85
+
+
+def test_rq3_fit_sample_count_insensitive(ds):
+    D = jnp.asarray(ds.docs)
+    Q = jnp.asarray(ds.queries["dl19"])
+    n_small = _ndcg(D, Q, ds.qrels["dl19"],
+                    StaticPruner(cutoff=0.5).fit(D[:500]))
+    n_large = _ndcg(D, Q, ds.qrels["dl19"],
+                    StaticPruner(cutoff=0.5).fit(D))
+    assert abs(n_small - n_large) < 0.05
+
+
+def test_streaming_fit_equivalent(ds):
+    D = jnp.asarray(ds.docs)
+    p1 = StaticPruner(cutoff=0.5).fit(D)
+    p2 = StaticPruner(cutoff=0.5).fit_streaming(
+        [np.asarray(D[i:i + 1000]) for i in range(0, D.shape[0], 1000)])
+    i1 = p1.prune_index(D[:100])
+    i2 = p2.prune_index(D[:100])
+    # eigenvectors can flip sign; compare magnitudes of projections
+    np.testing.assert_allclose(np.abs(np.asarray(i1)), np.abs(np.asarray(i2)),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_save_load_roundtrip(tmp_path, ds):
+    D = jnp.asarray(ds.docs)
+    pr = StaticPruner(cutoff=0.25).fit(D)
+    path = str(tmp_path / "pruner.npz")
+    pr.save(path)
+    pr2 = StaticPruner.load(path, cutoff=0.25)
+    np.testing.assert_allclose(np.asarray(pr.prune_index(D[:50])),
+                               np.asarray(pr2.prune_index(D[:50])),
+                               rtol=1e-5)
+
+
+def test_build_index_variants(ds):
+    D = jnp.asarray(ds.docs)
+    pr = StaticPruner(m=32).fit(D)
+    idx = pr.build_index(D)
+    assert idx.dim == 32
+    idx8 = pr.build_index(D, quantize_int8=True)
+    assert idx8.vectors.dtype == jnp.int8
+    q = pr.transform_queries(jnp.asarray(ds.queries["dl19"]))
+    s, ids = idx8.search(q, k=10)
+    assert np.isfinite(np.asarray(s)).all()
+
+
+def test_block_rows_invariance(ds):
+    D = jnp.asarray(ds.docs)
+    pr = StaticPruner(cutoff=0.5).fit(D)
+    a = pr.prune_index(D, block_rows=999)
+    b = pr.prune_index(D, block_rows=10**6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,117 @@
+"""End-to-end behaviour of the paper's system.
+
+Full pipeline on CPU: train a tiny bi-encoder with contrastive loss ->
+encode a synthetic corpus -> fit PCA offline -> prune index + queries ->
+serve top-k -> score with IR metrics -> verify the paper's qualitative
+claims hold on the *learned* (not just synthetic-gaussian) embeddings.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, StaticPruner
+from repro.core.metrics import evaluate_run, mean_metrics
+from repro.data.tokens import pair_batch
+from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
+                                    init_biencoder)
+from repro.optim import adamw_init, adamw_update
+
+CFG = BiEncoderConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=256,
+                      embed_dim=64, max_len=32, compute_dtype="float32",
+                      remat=False, temperature=0.1)
+
+
+@pytest.fixture(scope="module")
+def trained_encoder():
+    params = init_biencoder(jax.random.PRNGKey(0), CFG)
+    opt = adamw_init(params)
+    step = jax.jit(lambda p, o, b: _step(p, o, b))
+
+    def _step(p, o, b):
+        loss, g = jax.value_and_grad(contrastive_loss)(p, b, CFG)
+        p, o = adamw_update(g, o, p, jnp.float32(3e-4))
+        return p, o, loss
+
+    losses = []
+    for t in range(30):
+        b = {k: jnp.asarray(v) for k, v in
+             pair_batch(0, t, batch=32, seq_len=16, vocab=256).items()}
+        params, opt, loss = step(params, opt, b)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], "contrastive training must descend"
+    return params
+
+
+def _encode_corpus(params, n_docs=600, seq_len=16):
+    """Corpus = topic-structured docs; queries = noisy same-topic variants."""
+    docs, queries, qrels = [], [], {}
+    for i in range(0, n_docs, 64):
+        b = pair_batch(99, i, batch=min(64, n_docs - i), seq_len=seq_len,
+                       vocab=256)
+        docs.append(b["d_tokens"])
+        queries.append(b["q_tokens"])
+    d_tokens = np.concatenate(docs)[:n_docs]
+    q_tokens = np.concatenate(queries)[:n_docs]
+    ones = jnp.ones((n_docs, seq_len), jnp.int32)
+    D = np.asarray(encode(params, jnp.asarray(d_tokens), ones, CFG))
+    # 40 queries; each query's relevant doc is its paired doc
+    Q = np.asarray(encode(params, jnp.asarray(q_tokens[:40]),
+                          ones[:40], CFG))
+    qrels = {i: {i: 1} for i in range(40)}
+    return jnp.asarray(D), jnp.asarray(Q), qrels
+
+
+def _run_metrics(D, Q, qrels, pruner=None):
+    if pruner is not None:
+        D = pruner.prune_index(D)
+        Q = pruner.transform_queries(Q)
+    _, ids = DenseIndex.build(D).search(Q, k=20)
+    run = {i: list(map(int, np.asarray(ids)[i])) for i in range(Q.shape[0])}
+    return mean_metrics(evaluate_run(run, qrels, metrics=("MRR@10",)))["MRR@10"]
+
+
+def test_end_to_end_train_encode_prune_serve(trained_encoder):
+    D, Q, qrels = _encode_corpus(trained_encoder)
+    base = _run_metrics(D, Q, qrels)
+    assert base > 0.2, f"trained encoder must retrieve paired docs, got {base}"
+
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    pruned = _run_metrics(D, Q, qrels, pruner)
+    # paper claim on learned embeddings: 50% pruning keeps most quality
+    assert pruned > base * 0.75, (base, pruned)
+
+
+def test_end_to_end_index_size_halves(trained_encoder):
+    D, _, _ = _encode_corpus(trained_encoder, n_docs=200)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    full = DenseIndex.build(D)
+    pruned = DenseIndex.build(pruner.prune_index(D))
+    assert pruned.nbytes == full.nbytes // 2
+
+
+def test_end_to_end_pallas_kernel_serving_path(trained_encoder):
+    D, Q, qrels = _encode_corpus(trained_encoder, n_docs=300)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    qh = pruner.transform_queries(Q)
+    a = DenseIndex.build(Dh, backend="jnp").search(qh, k=10)
+    b = DenseIndex.build(Dh, backend="pallas").search(qh, k=10)
+    for i in range(qh.shape[0]):
+        assert set(np.asarray(a[1])[i].tolist()) == set(np.asarray(b[1])[i].tolist())
+
+
+def test_serving_driver_roundtrip():
+    """RetrievalServer: batched async queries return correct neighbours."""
+    from repro.launch.serve import RetrievalServer
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(rng.standard_normal((500, 32)), jnp.float32)
+    pruner = StaticPruner(cutoff=0.25).fit(D)
+    index = DenseIndex.build(pruner.prune_index(D))
+    server = RetrievalServer(index, pruner, k=5, max_batch=8)
+    try:
+        q = np.asarray(D[42])
+        scores, ids = server.query(q)
+        assert 42 in ids.tolist()   # self-retrieval through the pruned space
+    finally:
+        server.close()
