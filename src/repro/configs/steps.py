@@ -23,6 +23,7 @@ from repro.models import gnn as G
 from repro.models import recsys as R
 from repro.models import transformer as T
 from repro.optim import adamw, adafactor
+from repro.par import compat
 from repro.par import sharding as SH
 
 TOPK_SERVE = 100  # retrieval top-k
@@ -765,10 +766,10 @@ def _sharded_index_topk(index: jax.Array, q: jax.Array, k: int, mesh: Mesh,
 
     # the merged top-k is replicated by construction (all_gather + same
     # reduction everywhere) but that can't be statically proven: check_vma off
-    return jax.shard_map(shard_fn, mesh=mesh,
-                         in_specs=(P(axes, None), P(None, None)),
-                         out_specs=(P(None, None), P(None, None)),
-                         check_vma=False)(index, q)
+    return compat.shard_map(shard_fn, mesh=mesh,
+                            in_specs=(P(axes, None), P(None, None)),
+                            out_specs=(P(None, None), P(None, None)),
+                            check_vma=False)(index, q)
 
 
 def _sharded_topk_1d(scores: jax.Array, k: int, mesh: Mesh):
@@ -788,9 +789,9 @@ def _sharded_topk_1d(scores: jax.Array, k: int, mesh: Mesh):
         ms, mi = _topk_merge(s_all, i_all, k)
         return ms[0], mi[0]
 
-    return jax.shard_map(shard_fn, mesh=mesh, in_specs=(P(axes),),
-                         out_specs=(P(None), P(None)),
-                         check_vma=False)(scores)
+    return compat.shard_map(shard_fn, mesh=mesh, in_specs=(P(axes),),
+                            out_specs=(P(None), P(None)),
+                            check_vma=False)(scores)
 
 
 BUNDLE_BUILDERS = {

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.par import compat
+
 
 Backend = Literal["jnp", "pallas"]
 
@@ -43,7 +45,8 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
     Never materialises the full (B, n) score matrix — the jnp analogue of
     the Pallas fused kernel, and the oracle it is tested against.
     ``vma_axes``: when called inside shard_map over those axes, the scan
-    carry must be marked varying (jax.lax.pcast) to typecheck.
+    carry must be marked varying (compat.mark_varying) to typecheck on
+    JAX versions with VMA tracking.
     """
     n, d = D.shape
     B = Q.shape[0]
@@ -67,8 +70,7 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
 
     init = (jnp.full((B, k), -jnp.inf, jnp.float32), jnp.full((B, k), -1, jnp.int32))
     if vma_axes:
-        init = jax.tree.map(
-            lambda x: jax.lax.pcast(x, vma_axes, to="varying"), init)
+        init = compat.mark_varying(init, vma_axes)
     starts = jnp.arange(nblocks, dtype=jnp.int32) * block
     (scores, ids), _ = jax.lax.scan(body, init, (blocks, starts))
     return scores, ids
@@ -139,15 +141,25 @@ class ShardedDenseIndex:
     n/num_devices contiguous rows. Search = local blocked scan per shard
     followed by a global merge of per-shard top-k — the only collective is
     an all-gather of (B, k) scores + ids per shard (k·chips ≪ n).
+
+    ``backend`` selects the per-shard scan: 'jnp' (blocked XLA scan) or
+    'pallas' (fused score-and-select kernel — interpreted off-TPU).
     """
 
-    vectors: jax.Array          # (n, m) sharded P(axes, None)
+    vectors: jax.Array          # (n_padded, m) sharded P(axes, None)
     mesh: Mesh
     scale: jax.Array | None = None
+    backend: Backend = "jnp"
+    n_real: int | None = None   # logical row count before device padding
+    # compiled search per (B, k, dtype) — rebuilding the shard_map closure
+    # per call would recompile per batch and cap serving at trace speed
+    _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
 
     @classmethod
     def build(cls, vectors: jax.Array, mesh: Mesh, *,
-              quantize_int8: bool = False) -> "ShardedDenseIndex":
+              quantize_int8: bool = False,
+              backend: Backend = "jnp") -> "ShardedDenseIndex":
         axes = tuple(mesh.axis_names)
         scale = None
         v = jnp.asarray(vectors)
@@ -161,36 +173,65 @@ class ShardedDenseIndex:
         if pad:
             v = jnp.pad(v, ((0, pad), (0, 0)))
         v = jax.device_put(v, sharding)
-        return cls(vectors=v, mesh=mesh, scale=scale)
+        return cls(vectors=v, mesh=mesh, scale=scale, backend=backend,
+                   n_real=n)
 
     @property
     def n(self) -> int:
-        return self.vectors.shape[0]
+        """Logical (unpadded) row count."""
+        return self.n_real if self.n_real is not None else self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        b = self.vectors.size * self.vectors.dtype.itemsize
+        if self.scale is not None:
+            b += self.scale.size * self.scale.dtype.itemsize
+        return b
 
     def search(self, queries: jax.Array, k: int = 10) -> tuple[jax.Array, jax.Array]:
-        axes = tuple(self.mesh.axis_names)
         q = jnp.atleast_2d(queries).astype(jnp.float32)
         if self.scale is not None:
             q = q * self.scale[None, :]
         k = min(k, self.n)
-        n = self.n
+        key = (q.shape[0], k)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = self._jit_cache[key] = jax.jit(self._search_fn(k))
+        return fn(self.vectors, q)
+
+    def _search_fn(self, k: int):
+        axes = tuple(self.mesh.axis_names)
+        n_real = self.n
         ndev = int(np.prod(self.mesh.devices.shape))
-        rows_per = n // ndev
+        rows_per = self.vectors.shape[0] // ndev
+        backend = self.backend
 
         def shard_fn(D_local, q_rep):
             # Which shard am I? Flat linear index over mesh axes.
             idx = jax.lax.axis_index(axes)
             base = idx * rows_per
-            s, ids = _scan_topk(D_local, q_rep, k, vma_axes=axes)
+            if backend == "pallas":
+                from repro.kernels import ops as kops
+                s, ids = kops.topk_score(D_local, q_rep, k=k)
+            else:
+                s, ids = _scan_topk(D_local, q_rep, k, vma_axes=axes)
             ids = jnp.where(ids >= 0, ids + base, -1)
+            # Device-padding rows score like real zero vectors — mask them
+            # out so an uneven corpus never surfaces ids >= n_real.
+            padded = ids >= n_real
+            s = jnp.where(padded, -jnp.inf, s)
+            ids = jnp.where(padded, -1, ids)
             # Gather every shard's candidates and merge.
             s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)      # (B, k*ndev)
             i_all = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
             return _topk_merge(s_all, i_all, k)
 
         # merged result is replicated by construction; not statically provable
-        fn = jax.shard_map(shard_fn, mesh=self.mesh,
-                           in_specs=(P(axes, None), P(None, None)),
-                           out_specs=(P(None, None), P(None, None)),
-                           check_vma=False)
-        return jax.jit(fn)(self.vectors, q)
+        return compat.shard_map(shard_fn, mesh=self.mesh,
+                                in_specs=(P(axes, None), P(None, None)),
+                                out_specs=(P(None, None), P(None, None)),
+                                check_vma=False)

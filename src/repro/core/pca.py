@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.par import compat
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -119,15 +121,22 @@ def gram_distributed(D: jax.Array, mesh: Mesh) -> jax.Array:
     ``D`` is (n, d) sharded ``P(mesh.axis_names, None)`` (rows over every
     device). Each device computes its strip's Gram and a single all-reduce
     of (d, d) fp32 — d ≤ 4096 ⇒ ≤ 64 MiB, negligible next to streaming D.
+    Row counts not divisible by the device count are zero-padded: zero rows
+    are Gram-neutral, so the result is exact.
     """
     axes = tuple(mesh.axis_names)
     spec = P(axes, None)
+    ndev = int(np.prod(mesh.devices.shape))
+    pad = (-D.shape[0]) % ndev
+    if pad:
+        D = jnp.pad(D, ((0, pad), (0, 0)))
 
     def local_gram(strip):
         strip = strip.astype(jnp.float32)
         return jax.lax.psum(strip.T @ strip, axes)
 
-    fn = jax.shard_map(local_gram, mesh=mesh, in_specs=(spec,), out_specs=P(None, None))
+    fn = compat.shard_map(local_gram, mesh=mesh, in_specs=(spec,),
+                          out_specs=P(None, None))
     return jax.jit(fn)(D)
 
 
@@ -220,9 +229,15 @@ def explained_variance_ratio(state: PCAState) -> jax.Array:
 
 
 def m_for_variance(state: PCAState, target: float) -> int:
-    """Smallest m whose leading eigenvalues explain >= target of total."""
+    """Smallest m whose leading eigenvalues explain >= target of total.
+
+    Clamped to [1, d]: with ``target=1.0`` fp32 rounding can leave
+    ``cumsum.max() < target``, where searchsorted would point past the
+    last component.
+    """
     csum = jnp.cumsum(explained_variance_ratio(state))
-    return int(jnp.searchsorted(csum, jnp.float32(target)) + 1)
+    m = int(jnp.searchsorted(csum, jnp.float32(target)) + 1)
+    return max(1, min(m, state.d))
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,8 @@ from collections import defaultdict
 
 import jax
 import numpy as np
+
+from repro.par import compat
 from jax import core as jcore
 
 
@@ -102,15 +104,10 @@ def _walk(jaxpr: jcore.Jaxpr) -> tuple[float, float]:
             if cj is not None:
                 sub = cj.jaxpr if hasattr(cj, "jaxpr") else cj
         elif prim == "shard_map":
-            cj = eqn.params.get("jaxpr")
-            if cj is not None:
-                sub = cj.jaxpr if hasattr(cj, "jaxpr") else cj
+            sub = compat.shard_map_eqn_body(eqn)
+            if sub is not None:
                 # shard_map body shapes are per-shard: scale back to global
-                mesh = eqn.params.get("mesh")
-                try:
-                    mult = float(np.prod(list(mesh.shape.values())))
-                except Exception:
-                    mult = 1.0
+                mult = compat.shard_map_eqn_device_count(eqn)
         if sub is not None:
             f, b = _walk(sub)
             flops += mult * f

@@ -10,13 +10,23 @@ The paper's online path, end to end:
 ``--compare-full`` serves the unpruned index side by side and reports the
 measured speedup vs the O(d/m) prediction.
 
-Example:
+``--sharded`` row-shards the pruned index over a mesh of every visible
+device and serves through ``ShardedDenseIndex`` (local fused scan + tiny
+global top-k merge). On a CPU-only host, ``--host-devices N`` forces an
+N-way mesh via ``XLA_FLAGS=--xla_force_host_platform_device_count`` —
+the same code path a TPU pod takes, minus the speed. ``--backend pallas``
+selects the fused score-and-select kernel for the (per-shard) scan.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 --dim 256 \
       --cutoff 0.5 --queries 256 --batch 32
+  PYTHONPATH=src python -m repro.launch.serve --sharded --host-devices 4 \
+      --backend pallas
 """
 from __future__ import annotations
 
 import argparse
+import os
 import queue
 import threading
 import time
@@ -25,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DenseIndex, StaticPruner
+from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
 from repro.data.synthetic import make_dataset
 
 
@@ -61,7 +71,15 @@ class BatchingQueue:
 
 
 class RetrievalServer:
-    def __init__(self, index: DenseIndex, pruner: StaticPruner | None,
+    """Batched query server over a DenseIndex or ShardedDenseIndex.
+
+    Both index types expose ``search(q, k) -> (scores, ids)``; the sharded
+    one fans the batch out over the mesh and merges per-shard top-k, so the
+    server loop is layout-agnostic.
+    """
+
+    def __init__(self, index: DenseIndex | ShardedDenseIndex,
+                 pruner: StaticPruner | None,
                  k: int = 10, max_batch: int = 32):
         self.index = index
         self.pruner = pruner
@@ -94,6 +112,17 @@ class RetrievalServer:
         self._worker.join(timeout=2.0)
 
 
+def _force_host_devices(n: int) -> None:
+    """Ask XLA for an n-way host platform. Only effective before the JAX
+    backend initialises — call first thing in main, before any array op."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-docs", type=int, default=50000)
@@ -103,7 +132,18 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--compare-full", action="store_true")
+    ap.add_argument("--sharded", action="store_true",
+                    help="row-shard the index over a mesh of every device")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force an N-way host-platform mesh via XLA_FLAGS "
+                         "(default: 4 when --sharded; no-op on non-CPU "
+                         "platforms or once JAX is initialised)")
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
+                    help="scan backend for the (per-shard) score+top-k")
+    ap.add_argument("--quantize-int8", action="store_true")
     args = ap.parse_args()
+
+    _force_host_devices(args.host_devices or (4 if args.sharded else 0))
 
     print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
     ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,
@@ -113,9 +153,21 @@ def main() -> None:
     Q = np.tile(Q, (max(1, args.queries // len(Q) + 1), 1))[:args.queries]
 
     pruner = StaticPruner(cutoff=args.cutoff).fit(D)
-    index = DenseIndex.build(pruner.prune_index(D))
-    print(f"[serve] pruned index: {index.n} x {index.dim} "
-          f"({index.nbytes/2**20:.1f} MiB)")
+    pruned = pruner.prune_index(D)
+    if args.sharded:
+        ndev = jax.device_count()
+        mesh = jax.make_mesh((ndev,), ("data",))
+        index = ShardedDenseIndex.build(pruned, mesh,
+                                        quantize_int8=args.quantize_int8,
+                                        backend=args.backend)
+        print(f"[serve] sharded index: {index.n} x {index.dim} over "
+              f"{ndev} devices ({index.nbytes/2**20:.1f} MiB, "
+              f"backend={args.backend})")
+    else:
+        index = DenseIndex.build(pruned, quantize_int8=args.quantize_int8,
+                                 backend=args.backend)
+        print(f"[serve] pruned index: {index.n} x {index.dim} "
+              f"({index.nbytes/2**20:.1f} MiB)")
 
     server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch)
     lat = []

@@ -15,9 +15,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import layers as L
 from repro.models.transformer import TransformerConfig, _init_layer, _norm
+from repro.par import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,3 +129,19 @@ def contrastive_loss_sharded(params: dict, batch: dict, cfg: BiEncoderConfig,
     logp = jax.nn.log_softmax(logits, axis=-1)
     loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
     return jax.lax.pmean(loss, axis)
+
+
+def shard_contrastive_loss(params: dict, batch: dict, cfg: BiEncoderConfig,
+                           mesh: Mesh, axis: str | tuple[str, ...] = "data"
+                           ) -> jax.Array:
+    """``contrastive_loss_sharded`` wrapped in shard_map over ``mesh``.
+
+    Params replicated, batch row-sharded on ``axis``. The loss is pmean'd
+    inside the body so the output is replicated — not statically provable,
+    hence check_vma off.
+    """
+    bspec = {k: P(axis, *([None] * (jnp.ndim(v) - 1))) for k, v in batch.items()}
+    fn = compat.shard_map(
+        lambda p, b: contrastive_loss_sharded(p, b, cfg, axis),
+        mesh=mesh, in_specs=(P(), bspec), out_specs=P(), check_vma=False)
+    return fn(params, batch)

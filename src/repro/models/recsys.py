@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.models.layers import (apply_dense, init_dense, init_mlp_stack,
                                  apply_mlp_stack)
+from repro.par import compat
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +66,7 @@ def sharded_embedding_bag(table: jax.Array, idx: jax.Array, *, axis: str,
     [shard*rows : (shard+1)*rows) of the logical table. ``idx`` replicated.
     Out-of-range ids resolve to 0 locally; psum assembles the true rows.
     """
-    n_shards = jax.lax.axis_size(axis)
+    n_shards = compat.axis_size(axis)
     rows = vocab // n_shards
     shard = jax.lax.axis_index(axis)
     lo = shard * rows

@@ -25,6 +25,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.par import compat
+
 
 def compress_int8(g: jax.Array, scale: jax.Array) -> jax.Array:
     q = jnp.clip(jnp.round(g / jnp.maximum(scale, 1e-20)), -127, 127)
@@ -41,8 +43,7 @@ def compressed_psum(g: jax.Array, axis) -> jax.Array:
     scale = jnp.maximum(absmax, 1e-20) / 127.0
     q = compress_int8(g, scale)
     total = jax.lax.psum(q.astype(jnp.int32), axis)
-    n = jax.lax.axis_size(axis) if isinstance(axis, str) else 1
-    return decompress_int8(total, scale) / 1.0  # sum semantics (not mean)
+    return decompress_int8(total, scale)  # sum semantics (not mean)
 
 
 def error_feedback_step(grads: Any, residual: Any, axis) -> tuple[Any, Any]:
@@ -51,8 +52,6 @@ def error_feedback_step(grads: Any, residual: Any, axis) -> tuple[Any, Any]:
     Returns (mean-reduced grads, new residuals). Residuals have param shape,
     fp32, and must persist across steps (they are part of training state).
     """
-    nd = jax.lax.axis_size(axis) if isinstance(axis, str) else None
-
     def one(g, r):
         gf = g.astype(jnp.float32) + r
         absmax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
@@ -61,7 +60,7 @@ def error_feedback_step(grads: Any, residual: Any, axis) -> tuple[Any, Any]:
         sent = decompress_int8(q, scale)
         new_r = gf - sent
         total = jax.lax.psum(q.astype(jnp.int32), axis)
-        mean = decompress_int8(total, scale) / jax.lax.axis_size(axis)
+        mean = decompress_int8(total, scale) / compat.axis_size(axis)
         return mean.astype(g.dtype), new_r
 
     flat_g, treedef = jax.tree.flatten(grads)

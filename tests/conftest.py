@@ -1,0 +1,13 @@
+"""Force a 4-way host platform so the sharded parity tests exercise real
+multi-device meshes on CPU-only CI.
+
+conftest is imported before any test module, i.e. before the JAX backend
+initialises — the only window in which XLA_FLAGS still takes effect. An
+operator-set XLA_FLAGS with an explicit device count wins.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count=4".strip())

@@ -53,12 +53,8 @@ def test_remat_recompute_counted():
 
 
 def test_hlo_collectives_while_multiplication():
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",)) if len(jax.devices()) == 1 else None
-    if mesh is None:
-        pytest.skip("device layout")
-    # single-device: no real collectives; just verify the parser returns a
-    # well-formed structure on an arbitrary compiled program with a while
+    # no collectives in this program regardless of device count; just verify
+    # the parser returns a well-formed structure on a compiled while-loop
     def f(x):
         def body(c, _):
             return jnp.tanh(c) * 2, None

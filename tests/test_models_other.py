@@ -6,8 +6,9 @@ import jax.numpy as jnp
 
 from repro.models import recsys as R
 from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
-                                    init_biencoder)
+                                    init_biencoder, shard_contrastive_loss)
 from repro.models.gnn import GNNConfig, forward as gnn_fwd, init_gnn, mse_loss
+from repro.par import compat
 
 KEY = jax.random.PRNGKey(0)
 
@@ -100,9 +101,10 @@ def test_sharded_embedding_bag_matches_plain():
     idx = jnp.asarray([3, 9, 63, 0], jnp.int32)
     from jax.sharding import PartitionSpec as P
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda t, i: R.sharded_embedding_bag(t, i, axis="model", vocab=64),
-        mesh=mesh, in_specs=(P("model", None), P()), out_specs=P())
+        mesh=mesh, in_specs=(P("model", None), P()), out_specs=P(),
+        check_vma=False)
     got = fn(table, idx)
     want = R.embedding_bag(table, idx)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
@@ -209,3 +211,20 @@ def test_contrastive_training_descends():
         p = jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g)
     l1 = float(contrastive_loss(p, b, BCFG))
     assert l1 < l0
+
+
+@pytest.mark.parametrize("ndev", [1, 2])
+def test_shard_contrastive_loss_matches_replicated(ndev):
+    from repro.data.tokens import pair_batch
+    if jax.device_count() < ndev:
+        pytest.skip(f"needs {ndev} devices")
+    mesh = jax.make_mesh((ndev,), ("data",))
+    p = init_biencoder(KEY, BCFG)
+    b = {k: jnp.asarray(v) for k, v in
+         pair_batch(0, 0, batch=8, seq_len=12, vocab=128).items()}
+    # rank-heterogeneous batch: per-example weights ride along untouched by
+    # the loss, pinning the rank-aware in_specs
+    b["weight"] = jnp.ones((8,), jnp.float32)
+    got = shard_contrastive_loss(p, b, BCFG, mesh, axis="data")
+    want = contrastive_loss(p, {k: b[k] for k in b if k != "weight"}, BCFG)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-5)

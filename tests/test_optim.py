@@ -10,6 +10,7 @@ from repro.optim import (AdamWConfig, adafactor_init, adafactor_update,
                          constant_lr, error_feedback_step, warmup_cosine)
 from repro.optim.adamw import opt_state_specs, zero1_specs
 from repro.optim.grad_compress import init_residual
+from repro.par import compat
 
 
 def _quadratic_problem():
@@ -90,8 +91,8 @@ def test_compressed_psum_single_device():
     mesh = jax.make_mesh((1,), ("data",))
     g = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)),
                     jnp.float32)
-    fn = jax.shard_map(lambda x: compressed_psum(x, "data"), mesh=mesh,
-                       in_specs=(P(),), out_specs=P(), check_vma=False)
+    fn = compat.shard_map(lambda x: compressed_psum(x, "data"), mesh=mesh,
+                          in_specs=(P(),), out_specs=P(), check_vma=False)
     out = fn(g)
     rel = float(jnp.linalg.norm(out - g) / jnp.linalg.norm(g))
     assert rel < 0.01   # int8 quantisation error only
@@ -105,8 +106,8 @@ def test_error_feedback_accumulates_residual():
     def step(g, r):
         return error_feedback_step(g, r, "data")
 
-    fn = jax.shard_map(step, mesh=mesh, in_specs=(P(), P()),
-                       out_specs=(P(), P()), check_vma=False)
+    fn = compat.shard_map(step, mesh=mesh, in_specs=(P(), P()),
+                          out_specs=(P(), P()), check_vma=False)
     total = jnp.zeros((32,))
     g, r = grads, residual
     for _ in range(40):

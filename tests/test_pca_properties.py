@@ -1,0 +1,77 @@
+"""Hypothesis property tests on the paper's PCA invariants.
+
+Separated from test_pca.py so the optional ``hypothesis`` dependency can
+never break tier-1 collection: importorskip skips this module cleanly when
+the package is absent (it ships in the ``dev`` extra).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (fit_pca, transform, transform_query,
+                        inverse_transform)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(20, 200), d=st.integers(4, 48),
+       seed=st.integers(0, 1000))
+def test_property_eigenvalues_nonneg_sum_to_trace(n, d, seed):
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    s = fit_pca(D)
+    ev = np.asarray(s.eigenvalues, np.float64)
+    assert (ev >= -1e-3).all()
+    trace = float(np.trace(np.asarray(D, np.float64).T @ np.asarray(D, np.float64)))
+    assert np.isclose(ev.sum(), trace, rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(6, 40), m_frac=st.floats(0.2, 0.9),
+       seed=st.integers(0, 1000))
+def test_property_projection_norm_never_increases(d, m_frac, seed):
+    """||W_mᵀ x|| <= ||x||: orthogonal projection is a contraction."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((100, d)), jnp.float32)
+    s = fit_pca(D)
+    m = max(1, int(d * m_frac))
+    X = jnp.asarray(rng.standard_normal((17, d)), jnp.float32)
+    T = transform(X, s, m)
+    assert (np.linalg.norm(np.asarray(T), axis=1)
+            <= np.linalg.norm(np.asarray(X), axis=1) + 1e-3).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), m=st.integers(1, 16))
+def test_property_truncation_error_monotone(seed, m):
+    """Reconstruction error is non-increasing in m (Eckart–Young)."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((80, 16)), jnp.float32)
+    s = fit_pca(D)
+
+    def err(mm):
+        T = transform(D, s, mm)
+        rec = inverse_transform(T, s)
+        return float(jnp.linalg.norm(rec - D))
+
+    if m < 16:
+        assert err(m) >= err(m + 1) - 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_query_doc_symmetry(seed):
+    """Scores via transformed docs+queries == scores in truncated space either way."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((60, 24)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((24,)), jnp.float32)
+    s = fit_pca(D)
+    m = 12
+    s1 = transform(D, s, m) @ transform_query(q, s, m)
+    W = s.components[:, :m]
+    s2 = (D @ W) @ (W.T @ q)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3,
+                               atol=1e-4)

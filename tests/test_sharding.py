@@ -3,20 +3,20 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from jax.sharding import AbstractMesh
-
+from repro.par.compat import abstract_mesh
 from repro.par.sharding import (ShardingRules, gnn_rules, lm_rules,
                                 logical_to_physical, recsys_rules, spec_for)
 
-# rules resolve against mesh *shape* only — AbstractMesh needs no devices
-MESH2 = AbstractMesh((1, 2), ("data", "model"))
+# rules resolve against mesh *shape* only — an abstract mesh needs no
+# devices; compat.abstract_mesh handles both AbstractMesh signatures
+MESH2 = abstract_mesh((1, 2), ("data", "model"))
 
 
 def test_logical_axes():
     assert logical_to_physical("dp", MESH2) == ("data",)
     assert logical_to_physical("tp", MESH2) == ("model",)
     assert logical_to_physical("fsdp", MESH2) == ("data", "model")
-    m3 = AbstractMesh((1, 1, 2), ("pod", "data", "model"))
+    m3 = abstract_mesh((1, 1, 2), ("pod", "data", "model"))
     assert logical_to_physical("dp", m3) == ("pod", "data")
 
 
@@ -51,14 +51,14 @@ def test_lm_rules_2d_fsdp_tp():
 def test_lm_rules_smollm_fallbacks():
     # 16-wide model axis vs 9-head smollm: fused proj (576) shards,
     # per-head reshape never sees a 9-way constraint
-    mesh16 = AbstractMesh((1, 16), ("data", "model"))
+    mesh16 = abstract_mesh((1, 16), ("data", "model"))
     rules = lm_rules()
     spec = rules.spec("layers/attn/wq/w", (30, 576, 576), mesh16)
     assert spec == P(None, "data", "model")
 
 
 def test_moe_rules_ep_vs_tp():
-    mesh16 = AbstractMesh((1, 16), ("data", "model"))
+    mesh16 = abstract_mesh((1, 16), ("data", "model"))
     rules = lm_rules(moe=True)
     # arctic: 128 experts % 16 == 0 -> EP (+ ff over dp)
     assert rules.spec("layers/moe/w1", (35, 128, 7168, 4864), mesh16) \
