@@ -1,37 +1,154 @@
-"""Perf — the paper's §2 complexity claims, measured.
+"""Perf — the paper's §2 complexity claims, measured, plus the serving sweep.
 
   * query scoring time O(dn) -> O(dm + mn): wall-clock speedup vs d/m
   * index bytes O(dn) -> O(mn) (+ md for W_m)
-  * kernel path: fused score+top-k vs unfused matmul+top_k
+  * serving sweep {backend x dtype x layout x merge}: us/call, qps, bytes,
+    recall@10 per config — the trajectory ``BENCH_perf.json`` tracks PR
+    over PR (written by ``benchmarks.run``)
+  * select-path A/B: the two-stage + block-skip ``_scan_topk`` against the
+    legacy concat-and-full-top_k select on the same corpus
   * beyond-paper: int8 index on top of PCA (bytes /4, recall preserved)
 
-Emits ``name,us_per_call,derived`` CSV rows like every other bench.
+Emits ``name,us_per_call,derived`` CSV rows like every other bench and
+returns a JSON-ready dict.
 """
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import DenseIndex, StaticPruner
+from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
+from repro.core.index import _scan_topk, _topk_merge
 from repro.kernels import ops as kops
 
 N_DOCS = 100_000
 DIM = 768
 N_QUERIES = 16
 K = 10
+ITERS = 3
+# interpret-mode Pallas pays a huge per-op interpreter tax off-TPU; cap its
+# corpus so the sweep stays tractable (the config records its own n)
+PALLAS_MAX_DOCS = 20_000
 
 
-def _bench(fn, *args, iters=5) -> float:
-    fn(*args)  # compile + warmup
-    jax.block_until_ready(fn(*args))
-    t0 = time.time()
+def _bench(fn, *args, iters: int = ITERS) -> float:
+    """Median us/call. Blocks on the result inside the timed region each
+    iteration — with JAX's async dispatch, timing a loop of un-blocked
+    calls measures enqueue rate, not latency."""
+    jax.block_until_ready(fn(*args))   # compile + warmup
+    times = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def _recall(ids_ref: np.ndarray, ids: np.ndarray, k: int) -> float:
+    return float(np.mean([
+        len(set(ids_ref[i].tolist()) & set(ids[i].tolist())) / k
+        for i in range(ids_ref.shape[0])]))
+
+
+# ---------------------------------------------------------------------------
+# legacy select path (pre two-stage/block-skip) — kept only for the A/B row
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k", "block"))
+def _scan_topk_concat(D, Q, k, block=65536):
+    """The old select: concat running + full strip, one big top_k per strip."""
+    n, d = D.shape
+    B = Q.shape[0]
+    block = min(block, n)
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
+    blocks = Dp.reshape(nblocks, block, d)
+    Qf = Q.astype(jnp.float32)
+
+    def body(carry, inp):
+        bs, bi = carry
+        blk, start = inp
+        s = Qf @ blk.T.astype(jnp.float32)
+        ids = start + jnp.arange(block, dtype=jnp.int32)[None, :]
+        s = jnp.where(ids < n, s, -jnp.inf)
+        cs = jnp.concatenate([bs, s], axis=1)
+        ci = jnp.concatenate([bi, jnp.broadcast_to(ids, (B, block))], axis=1)
+        return _topk_merge(cs, ci, k), None
+
+    init = (jnp.full((B, k), -jnp.inf, jnp.float32),
+            jnp.full((B, k), -1, jnp.int32))
+    starts = jnp.arange(nblocks, dtype=jnp.int32) * block
+    (scores, ids), _ = jax.lax.scan(body, init, (blocks, starts))
+    return scores, ids
+
+
+# ---------------------------------------------------------------------------
+# serving sweep
+# ---------------------------------------------------------------------------
+
+
+def _build_index(D, dtype: str, backend: str, layout: str, mesh):
+    if layout == "dense":
+        if dtype == "int8":
+            return DenseIndex.build(D, quantize_int8=True, backend=backend)
+        v = D.astype(jnp.bfloat16) if dtype == "bf16" else D
+        return DenseIndex.build(v, backend=backend)
+    merge = "hierarchical" if layout == "sharded-hier" else "flat"
+    if dtype == "int8":
+        return ShardedDenseIndex.build(D, mesh, quantize_int8=True,
+                                       backend=backend, merge=merge)
+    v = D.astype(jnp.bfloat16) if dtype == "bf16" else D
+    return ShardedDenseIndex.build(v, mesh, backend=backend, merge=merge)
+
+
+def _sweep(D, Q, ids_ref, emit) -> dict:
+    """{backend x dtype x layout(+merge)} serving grid on the pruned index."""
+    from repro.launch.serve import _serve_mesh
+    ndev = jax.device_count()
+    layouts = ["dense"]
+    meshes = {}
+    if ndev > 1:
+        # flat merges over a 1-D mesh; hierarchical needs the factored 2-D
+        # mesh (on 1-D it degenerates to the same single stage — measuring
+        # that would just duplicate the flat row)
+        meshes["sharded-flat"] = _serve_mesh(ndev, "flat")
+        meshes["sharded-hier"] = _serve_mesh(ndev, "hierarchical")
+        layouts += ["sharded-flat", "sharded-hier"]
+    else:
+        emit("# sweep: single device — sharded configs skipped")
+    out = {}
+    B = Q.shape[0]
+    for backend in ("jnp", "pallas"):
+        n_cap = min(D.shape[0], PALLAS_MAX_DOCS) if backend == "pallas" \
+            else D.shape[0]
+        Dc = D[:n_cap]
+        if n_cap == D.shape[0]:
+            ref_c = ids_ref
+        else:   # exact f32 ranking on the capped corpus
+            _, rid = DenseIndex.build(Dc).search(Q, k=K)
+            ref_c = np.asarray(rid)
+        for dtype in ("f32", "bf16", "int8"):
+            for layout in layouts:
+                name = f"{backend}_{dtype}_{layout}"
+                mesh = meshes.get(layout)
+                idx = _build_index(Dc, dtype, backend, layout, mesh)
+                us = _bench(lambda q: idx.search(q, k=K), Q)
+                _, ids = idx.search(Q, k=K)
+                rec = _recall(ref_c, np.asarray(ids), K)
+                qps = B / (us / 1e6)
+                out[name] = dict(us=us, qps=qps, nbytes=int(idx.nbytes),
+                                 recall=rec, n=n_cap, dim=int(D.shape[1]),
+                                 mesh=(list(mesh.devices.shape)
+                                       if mesh is not None else None))
+                emit(f"sweep_{name},{us:.0f},qps={qps:.1f} "
+                     f"bytes={idx.nbytes} recall@10={rec:.3f} n={n_cap}")
+    return out
 
 
 def run(emit=print) -> dict:
@@ -45,11 +162,19 @@ def run(emit=print) -> dict:
     Q = jnp.asarray(D_np[q_idx] + 0.05 * rng.standard_normal((N_QUERIES, DIM))
                     .astype(np.float32))
 
-    results = {}
+    results = {"meta": dict(n_docs=int(N_DOCS), dim=int(DIM),
+                            n_queries=int(N_QUERIES), k=int(K),
+                            iters=int(ITERS),
+                            device_count=int(jax.device_count()),
+                            backend=jax.default_backend(),
+                            jax_version=jax.__version__)}
     full = DenseIndex.build(D)
     t_full = _bench(lambda q: full.search(q, k=K), Q)
     emit(f"search_full_d{DIM},{t_full:.0f},bytes={full.nbytes}")
-    results["full"] = dict(us=t_full, nbytes=full.nbytes)
+    results["full"] = dict(us=t_full, qps=N_QUERIES / (t_full / 1e6),
+                           nbytes=int(full.nbytes), recall=1.0)
+    _, ids_full = full.search(Q, k=K)
+    ids_full = np.asarray(ids_full)
 
     for c in (0.25, 0.5, 0.75):
         pruner = StaticPruner(cutoff=c).fit(D)
@@ -57,35 +182,41 @@ def run(emit=print) -> dict:
         idx = DenseIndex.build(pruner.prune_index(D))
         qh = pruner.transform_queries(Q)
         t = _bench(lambda q: idx.search(q, k=K), qh)
-        # recall vs full-dim ranking
-        _, ids_f = full.search(Q, k=K)
         _, ids_p = idx.search(qh, k=K)
-        rec = np.mean([len(set(np.asarray(ids_f)[i]) & set(np.asarray(ids_p)[i])) / K
-                       for i in range(N_QUERIES)])
+        rec = _recall(ids_full, np.asarray(ids_p), K)
         emit(f"search_pca_m{m},{t:.0f},speedup={t_full/t:.2f}x "
              f"predicted={DIM/m:.2f}x bytes={idx.nbytes} recall@10={rec:.3f}")
-        results[f"pca_{c}"] = dict(us=t, m=m, speedup=t_full / t,
-                                   predicted=DIM / m, nbytes=idx.nbytes,
-                                   recall=float(rec))
+        results[f"pca_{c}"] = dict(us=t, qps=N_QUERIES / (t / 1e6), m=int(m),
+                                   speedup=t_full / t, predicted=DIM / m,
+                                   nbytes=int(idx.nbytes), recall=rec)
 
     # beyond paper: PCA(50%) + int8
     pruner = StaticPruner(cutoff=0.5).fit(D)
     idx8 = pruner.build_index(D, quantize_int8=True)
     qh = pruner.transform_queries(Q)
     t8 = _bench(lambda q: idx8.search(q, k=K), qh)
-    _, ids_f = full.search(Q, k=K)
     _, ids_8 = idx8.search(qh, k=K)
-    rec8 = np.mean([len(set(np.asarray(ids_f)[i]) & set(np.asarray(ids_8)[i])) / K
-                    for i in range(N_QUERIES)])
+    rec8 = _recall(ids_full, np.asarray(ids_8), K)
     emit(f"search_pca50_int8,{t8:.0f},bytes={idx8.nbytes} "
          f"compression={full.nbytes/idx8.nbytes:.1f}x recall@10={rec8:.3f}")
-    results["pca50_int8"] = dict(us=t8, nbytes=idx8.nbytes, recall=float(rec8))
+    results["pca50_int8"] = dict(us=t8, qps=N_QUERIES / (t8 / 1e6),
+                                 nbytes=int(idx8.nbytes), recall=rec8)
 
-    # kernel path (interpret mode on CPU: correctness + call shape, not TPU perf)
-    Dh = pruner.prune_index(D[:20000])
-    t_kern = _bench(lambda q: kops.topk_score(Dh, q, k=K, block_n=4096), qh)
-    emit(f"kernel_fused_topk_20k,{t_kern:.0f},interpret-mode")
-    results["kernel"] = dict(us=t_kern)
+    # serving sweep on the pruned index (the paper's serve-time artefact);
+    # recall reference = exact f32 ranking on the same pruned space
+    Dh = pruner.prune_index(D)
+    _, ids_ref_pruned = DenseIndex.build(Dh).search(qh, k=K)
+    results["sweep"] = _sweep(Dh, qh, np.asarray(ids_ref_pruned), emit)
+
+    # select-path A/B: two-stage + block-skip scan vs legacy concat select.
+    # Same arrays, same block size — isolates the selection machinery.
+    blk = min(65536, Dh.shape[0])
+    t_new = _bench(lambda q: _scan_topk(Dh, q, K, block=blk), qh)
+    t_old = _bench(lambda q: _scan_topk_concat(Dh, q, K, block=blk), qh)
+    emit(f"scan_select_new,{t_new:.0f},vs_old={t_old/t_new:.2f}x")
+    emit(f"scan_select_old,{t_old:.0f},")
+    results["scan_select"] = dict(new_us=t_new, old_us=t_old,
+                                  speedup=t_old / t_new)
 
     # offline build cost: gram + projection
     t_gram = _bench(lambda d: jnp.asarray(np.asarray(d)).T @ d, D, iters=2)

@@ -1,15 +1,22 @@
 """Benchmark orchestrator — one section per paper table/figure + perf.
 
 Prints ``name,us_per_call,derived`` CSV rows (perf benches) and the
-markdown tables reproducing the paper's Tables 1-2 / Figures 1-2.
+markdown tables reproducing the paper's Tables 1-2 / Figures 1-2. The perf
+section additionally writes ``BENCH_perf.json`` at the repo root — the
+per-PR perf trajectory (us/call, qps, index bytes, recall@10 per serving
+config) that CI uploads as an artifact.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,fig2] [--fast]
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+import pathlib
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_PERF_PATH = REPO_ROOT / "BENCH_perf.json"
 
 
 def main() -> None:
@@ -18,19 +25,30 @@ def main() -> None:
                     help="comma list: table1,table2,fig1,fig2,perf,size")
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora (CI-sized)")
+    ap.add_argument("--host-devices", type=int, default=4,
+                    help="CPU device count for the sharded perf configs")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    def need(name):
+        return only is None or name in only
+
+    if need("perf"):
+        # multi-device CPU mesh for the sharded sweep configs; must happen
+        # before the bench imports below pull in jax and touch a device
+        from repro.util import force_host_device_count
+        force_host_device_count(args.host_devices)
+
     import benchmarks.common as common
+    import benchmarks.perf_qps as perf_qps
     if args.fast:
         common.N_DOCS = 4000
         common.DIM = 256
+        perf_qps.N_DOCS = 4000
+        perf_qps.DIM = 256
 
     t0 = time.time()
     datasets = None
-
-    def need(name):
-        return only is None or name in only
 
     if need("table1") or need("table2") or need("fig1") or need("fig2"):
         print(f"# building {3} corpora (n={common.N_DOCS}, d={common.DIM})",
@@ -51,8 +69,10 @@ def main() -> None:
         f2(datasets)
     if need("perf"):
         print("\n### Perf — name,us_per_call,derived")
-        from benchmarks.perf_qps import run as pq
-        pq()
+        results = perf_qps.run()
+        BENCH_PERF_PATH.write_text(json.dumps(results, indent=2,
+                                              sort_keys=True) + "\n")
+        print(f"# wrote {BENCH_PERF_PATH}")
     if need("size"):
         print("\n### Index size — name,us_per_call,derived")
         from benchmarks.index_size import run as isz

@@ -741,28 +741,25 @@ def _sharded_index_topk(index: jax.Array, q: jax.Array, k: int, mesh: Mesh,
 
     ``hierarchical=True`` merges in two stages (within 'model', then across
     the dp axes): per-device gather volume drops from |devices|·k to
-    (|model| + |dp|)·k — 8x on a 16x16 pod. Exactness is preserved: a
-    global top-k entry is a top-k entry of its shard, hence survives both
-    stage merges.
+    (|model| + |dp|)·k — 8x on a 16x16 pod. Exactness and tie-breaks are
+    preserved (see ``repro.core.index._staged_topk_merge``, which is the
+    same machinery ``ShardedDenseIndex.search(merge=...)`` serves through).
     """
-    from repro.core.index import _scan_topk, _topk_merge
+    from repro.core.index import _scan_topk, _staged_topk_merge
     axes = tuple(mesh.axis_names)
     ndev = int(np.prod(mesh.devices.shape))
     rows_per = index.shape[0] // ndev
+    if hierarchical and len(axes) > 1:
+        inner = ("model",) if "model" in axes else (axes[-1],)
+        stages = (inner, tuple(a for a in axes if a not in inner))
+    else:
+        stages = (axes,)
 
     def shard_fn(idx_local, q_rep):
-        pos = jax.lax.axis_index(axes)
+        pos = compat.axis_index(axes)
         s, ids = _scan_topk(idx_local, q_rep, k, vma_axes=axes)
         ids = jnp.where(ids >= 0, ids + pos * rows_per, -1)
-        if hierarchical:
-            for stage in (("model",), tuple(a for a in axes if a != "model")):
-                s_all = jax.lax.all_gather(s, stage, axis=1, tiled=True)
-                i_all = jax.lax.all_gather(ids, stage, axis=1, tiled=True)
-                s, ids = _topk_merge(s_all, i_all, k)
-            return s, ids
-        s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)
-        i_all = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
-        return _topk_merge(s_all, i_all, k)
+        return _staged_topk_merge(s, ids, k, stages)
 
     # the merged top-k is replicated by construction (all_gather + same
     # reduction everywhere) but that can't be statically proven: check_vma off

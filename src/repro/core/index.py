@@ -28,12 +28,37 @@ from repro.par import compat
 
 
 Backend = Literal["jnp", "pallas"]
+Merge = Literal["flat", "hierarchical"]
 
 
 def _topk_merge(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Top-k of (B, C) candidate scores, returning (B, k) scores + gathered ids."""
     s, idx = jax.lax.top_k(scores, k)
     return s, jnp.take_along_axis(ids, idx, axis=-1)
+
+
+def _staged_topk_merge(s: jax.Array, ids: jax.Array, k: int,
+                       stages) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard (B, k) top-k across the mesh in all-gather stages.
+
+    ``stages`` is a sequence of axis-name tuples; each stage all-gathers the
+    surviving candidates over its axes and re-selects top-k. One stage over
+    every axis is the flat merge (k·ndev candidates per device); splitting
+    into two stages shrinks the per-device gather volume to
+    k·(|stage1| + |stage2|) — k·2√ndev on a square mesh. Exactness is
+    preserved: a global top-k entry is a top-k entry of every intermediate
+    device group it belongs to, so it survives each stage. Gather order is
+    row-major by mesh position in both layouts, so tie-breaks (and thus the
+    selected ids) are bit-identical between flat and staged merges.
+    """
+    for stage in stages:
+        stage = tuple(stage)
+        if not stage:
+            continue
+        s_all = jax.lax.all_gather(s, stage, axis=1, tiled=True)
+        i_all = jax.lax.all_gather(ids, stage, axis=1, tiled=True)
+        s, ids = _topk_merge(s_all, i_all, k)
+    return s, ids
 
 
 @partial(jax.jit, static_argnames=("k", "block", "vma_axes"))
@@ -43,7 +68,21 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
     """Blocked exact search: stream row blocks of D, keep a running top-k.
 
     Never materialises the full (B, n) score matrix — the jnp analogue of
-    the Pallas fused kernel, and the oracle it is tested against.
+    the Pallas fused kernel, and the oracle it is tested against. Mirrors
+    the kernel's structure:
+
+      * the index blocks keep their storage dtype (int8 stays int8 in the
+        scan carry's xs); each block upcasts to f32 only for its matmul —
+        no full-index fp32 shadow copy;
+      * two-stage select: ``top_k`` over the (B, block) strip alone, then a
+        tiny (B, 2k) merge with the running list — never a sort over the
+        (B, k + block) concat;
+      * block-skip guard: a strip whose max cannot beat the current k-th
+        best (across the whole batch) skips selection entirely under
+        ``lax.cond``. Skipping on equality is exact — strips are visited
+        in ascending id order, so later ties lose the first-occurrence
+        tie-break anyway.
+
     ``vma_axes``: when called inside shard_map over those axes, the scan
     carry must be marked varying (compat.mark_varying) to typecheck on
     JAX versions with VMA tracking.
@@ -56,17 +95,43 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
     Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
     blocks = Dp.reshape(nblocks, block, d)
     Qf = Q.astype(jnp.float32)
+    kk = min(k, block)   # strip-local candidate count
+
+    if nblocks == 1:
+        # single strip (block == n): the running list is empty, a guard can
+        # never fire, and the two-stage detour just adds a second sort —
+        # select directly
+        s = Qf @ Dp.T.astype(jnp.float32)
+        ids = jnp.broadcast_to(
+            jnp.arange(block, dtype=jnp.int32)[None, :], (B, block))
+        if k > block:
+            # fewer rows than k: sentinels first so they win -inf ties,
+            # matching the scan init and the Pallas kernel's -1 pads
+            s = jnp.concatenate(
+                [jnp.full((B, k), -jnp.inf, jnp.float32), s], axis=1)
+            ids = jnp.concatenate(
+                [jnp.full((B, k), -1, jnp.int32), ids], axis=1)
+        return _topk_merge(s, ids, k)
 
     def body(carry, inp):
         bs, bi = carry
         blk, start = inp
         s = Qf @ blk.T.astype(jnp.float32)                       # (B, block)
         ids = start + jnp.arange(block, dtype=jnp.int32)[None, :]
-        valid = ids < n
-        s = jnp.where(valid, s, -jnp.inf)
-        cs = jnp.concatenate([bs, s], axis=1)
-        ci = jnp.concatenate([bi, jnp.broadcast_to(ids, (B, block))], axis=1)
-        return _topk_merge(cs, ci, k), None
+        s = jnp.where(ids < n, s, -jnp.inf)
+
+        def merge(carry_in):
+            bs0, bi0 = carry_in
+            ss, si = jax.lax.top_k(s, kk)                        # (B, kk)
+            gi = start + si.astype(jnp.int32)
+            # running list first: at -inf ties its (-1) pads win the
+            # first-occurrence tie-break, matching the kernel's pads
+            cs = jnp.concatenate([bs0, ss], axis=1)              # (B, k+kk)
+            ci = jnp.concatenate([bi0, gi], axis=1)
+            return _topk_merge(cs, ci, k)
+
+        can_improve = jnp.max(s) > jnp.min(bs)
+        return jax.lax.cond(can_improve, merge, lambda c: c, (bs, bi)), None
 
     init = (jnp.full((B, k), -jnp.inf, jnp.float32), jnp.full((B, k), -1, jnp.int32))
     if vma_axes:
@@ -144,14 +209,20 @@ class ShardedDenseIndex:
 
     ``backend`` selects the per-shard scan: 'jnp' (blocked XLA scan) or
     'pallas' (fused score-and-select kernel — interpreted off-TPU).
+    ``merge`` selects the global candidate merge: 'flat' (one all-gather
+    over every axis, k·ndev candidates per query) or 'hierarchical' (one
+    stage per mesh dimension — within the minor axis, then across the
+    rest — shrinking the collective to k·(minor + rest) candidates; on a
+    1-axis mesh the two are the same single stage).
     """
 
     vectors: jax.Array          # (n_padded, m) sharded P(axes, None)
     mesh: Mesh
     scale: jax.Array | None = None
     backend: Backend = "jnp"
+    merge: Merge = "flat"
     n_real: int | None = None   # logical row count before device padding
-    # compiled search per (B, k, dtype) — rebuilding the shard_map closure
+    # compiled search per (B, k, merge) — rebuilding the shard_map closure
     # per call would recompile per batch and cap serving at trace speed
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                          compare=False)
@@ -159,7 +230,8 @@ class ShardedDenseIndex:
     @classmethod
     def build(cls, vectors: jax.Array, mesh: Mesh, *,
               quantize_int8: bool = False,
-              backend: Backend = "jnp") -> "ShardedDenseIndex":
+              backend: Backend = "jnp",
+              merge: Merge = "flat") -> "ShardedDenseIndex":
         axes = tuple(mesh.axis_names)
         scale = None
         v = jnp.asarray(vectors)
@@ -174,7 +246,7 @@ class ShardedDenseIndex:
             v = jnp.pad(v, ((0, pad), (0, 0)))
         v = jax.device_put(v, sharding)
         return cls(vectors=v, mesh=mesh, scale=scale, backend=backend,
-                   n_real=n)
+                   merge=merge, n_real=n)
 
     @property
     def n(self) -> int:
@@ -192,43 +264,55 @@ class ShardedDenseIndex:
             b += self.scale.size * self.scale.dtype.itemsize
         return b
 
-    def search(self, queries: jax.Array, k: int = 10) -> tuple[jax.Array, jax.Array]:
+    def search(self, queries: jax.Array, k: int = 10,
+               merge: Merge | None = None) -> tuple[jax.Array, jax.Array]:
         q = jnp.atleast_2d(queries).astype(jnp.float32)
         if self.scale is not None:
             q = q * self.scale[None, :]
         k = min(k, self.n)
-        key = (q.shape[0], k)
+        merge = self.merge if merge is None else merge
+        key = (q.shape[0], k, merge)
         fn = self._jit_cache.get(key)
         if fn is None:
-            fn = self._jit_cache[key] = jax.jit(self._search_fn(k))
+            fn = self._jit_cache[key] = jax.jit(self._search_fn(k, merge))
         return fn(self.vectors, q)
 
-    def _search_fn(self, k: int):
+    def _search_fn(self, k: int, merge: Merge):
         axes = tuple(self.mesh.axis_names)
         n_real = self.n
         ndev = int(np.prod(self.mesh.devices.shape))
         rows_per = self.vectors.shape[0] // ndev
         backend = self.backend
+        # Device-padding rows score like real zero vectors and can *win* the
+        # shard-local top-k (every real score may be negative), displacing
+        # real candidates before any post-hoc mask runs. All ``pad`` padding
+        # rows live in the last shard, so a local top-(k+pad) provably
+        # retains the shard's true top-k real rows; the pad entries are then
+        # masked and cut back to k before the gather.
+        pad = self.vectors.shape[0] - n_real
+        kp = k + pad
+        if merge == "hierarchical" and len(axes) > 1:
+            stages = ((axes[-1],), tuple(axes[:-1]))   # minor axis first
+        else:
+            stages = (axes,)
 
         def shard_fn(D_local, q_rep):
             # Which shard am I? Flat linear index over mesh axes.
-            idx = jax.lax.axis_index(axes)
+            idx = compat.axis_index(axes)
             base = idx * rows_per
             if backend == "pallas":
                 from repro.kernels import ops as kops
-                s, ids = kops.topk_score(D_local, q_rep, k=k)
+                s, ids = kops.topk_score(D_local, q_rep, k=kp)
             else:
-                s, ids = _scan_topk(D_local, q_rep, k, vma_axes=axes)
+                s, ids = _scan_topk(D_local, q_rep, kp, vma_axes=axes)
             ids = jnp.where(ids >= 0, ids + base, -1)
-            # Device-padding rows score like real zero vectors — mask them
-            # out so an uneven corpus never surfaces ids >= n_real.
             padded = ids >= n_real
             s = jnp.where(padded, -jnp.inf, s)
             ids = jnp.where(padded, -1, ids)
-            # Gather every shard's candidates and merge.
-            s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)      # (B, k*ndev)
-            i_all = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
-            return _topk_merge(s_all, i_all, k)
+            if pad:
+                s, ids = _topk_merge(s, ids, k)
+            # Gather every shard's candidates and merge (1 or 2 stages).
+            return _staged_topk_merge(s, ids, k, stages)
 
         # merged result is replicated by construction; not statically provable
         return compat.shard_map(shard_fn, mesh=self.mesh,

@@ -6,21 +6,35 @@ n·4 bytes, re-read for selection). FAISS-GPU fuses selection into the scan
 using warp-shuffle k-heaps — a mechanism with no TPU analogue. TPU-native
 adaptation:
 
-  * the (B, m) query block stays VMEM-resident; (block_n, m) strips of the
-    index stream HBM→VMEM and hit the MXU: ``S_blk = Q · D_blkᵀ``;
+  * the index streams HBM→VMEM in **its storage dtype** (f32/bf16/int8) —
+    int8 is dequantised in-register (the per-dim scale is folded into the
+    query before the kernel), so a pruned+quantised index really moves
+    n·m·1 bytes, not a 4x-inflated fp32 shadow copy;
+  * a (block_b, m) query tile stays VMEM-resident while (block_n, m) strips
+    of the index hit the MXU: ``S_blk = Q · D_blkᵀ``. The grid is
+    (batch tiles, index strips) with strips minor, so arbitrarily large B
+    works — each batch tile re-streams the index once;
   * a running top-k candidate list (scores + global ids) lives in VMEM
     scratch across grid steps;
-  * selection uses an **iterative max-extract** (k unrolled passes of
-    max / tie-break-by-min-id / mask), which lowers to pure VPU
-    max-reductions — no sort network, no warp primitives needed;
+  * selection is a **two-stage select**: the strip is partial-reduced by a
+    lane fold — (block_b, block_n) reshaped to (block_b, R, W) and maxed
+    over the R sub-strips — into a W-wide candidate buffer (W ≈ 2k), which
+    is then merged with the running top-k by k unrolled max-extract passes.
+    Per pass, only the masking of the extracted id and the lane-fold repair
+    touch the full strip, and those are element-wise / sublane reductions;
+    every cross-lane (last-axis) reduction is W+k wide instead of block_n
+    wide. The merge with the running list is fused into the same k passes
+    (no separate 2k extraction stage);
   * a **block-skip guard** (FAISS's "thermometer" trick, TPU-flavoured):
     if a strip's max score does not beat the current k-th best, the merge
     is skipped entirely under ``pl.when`` — for well-shuffled indexes the
-    merge runs O(few) times instead of O(n/block_n).
+    merge runs O(few) times instead of O(n/block_n). Skipping on equality
+    is exact: strips are visited in ascending id order, so a later tied
+    score loses the min-id tie-break anyway.
 
-HBM traffic ≈ bytes(D̂) streamed exactly once ⇒ the kernel is memory-bound
-at the index-read roofline, which is the paper's O(mn) term made optimal:
-pruning d→m cuts exactly the streamed bytes.
+HBM traffic ≈ bytes(D̂) streamed exactly once per batch tile ⇒ the kernel
+is memory-bound at the index-read roofline, which is the paper's O(mn)
+term made optimal: pruning d→m (and int8) cuts exactly the streamed bytes.
 
 Outputs are sorted descending; ties break toward the smaller doc id
 (matching ``jax.lax.top_k`` first-occurrence semantics).
@@ -34,42 +48,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 _NEG = float("-inf")
+_BIG = jnp.iinfo(jnp.int32).max
 
 
-def _extract_topk(scores: jax.Array, ids: jax.Array, k: int
-                  ) -> tuple[jax.Array, jax.Array]:
-    """Top-k by k unrolled max-extract passes. scores/ids: (B, C)."""
-    B = scores.shape[0]
-    out_s, out_i = [], []
-    s = scores
-    for _ in range(k):
-        m = jnp.max(s, axis=-1)                                   # (B,)
-        tie = s >= m[:, None]                                     # max positions
-        big = jnp.iinfo(jnp.int32).max
-        sel = jnp.min(jnp.where(tie, ids, big), axis=-1)          # min id among ties
-        out_s.append(m)
-        out_i.append(sel)
-        s = jnp.where(ids == sel[:, None], _NEG, s)
-    return jnp.stack(out_s, axis=-1), jnp.stack(out_i, axis=-1)   # (B, k)
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
 
 
-def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int):
+def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int,
+                 fold_w: int, fold_r: int):
+    pad_w = fold_r * fold_w - block_n
+
     def kernel(q_ref, d_ref, out_s_ref, out_i_ref, run_s_ref, run_i_ref):
-        i = pl.program_id(0)
+        i = pl.program_id(1)   # index strip (minor); program_id(0) = batch tile
 
         @pl.when(i == 0)
         def _init():
             run_s_ref[...] = jnp.full_like(run_s_ref, _NEG)
             # unique negative ids so id-keyed masking never collides
-            B = run_i_ref.shape[0]
-            neg = -(jax.lax.broadcasted_iota(jnp.int32, (B, k), 1) + 1)
+            bb = run_i_ref.shape[0]
+            neg = -(jax.lax.broadcasted_iota(jnp.int32, (bb, k), 1) + 1)
             run_i_ref[...] = neg
 
         q = q_ref[...]
-        blk = d_ref[...]
+        blk = d_ref[...].astype(jnp.float32)      # dequant/upcast in-register
         s = jax.lax.dot_general(
             q, blk, dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)                   # (B, block_n)
+            preferred_element_type=jnp.float32)               # (bb, block_n)
         gids = i * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(gids < n_valid, s, _NEG)
 
@@ -79,63 +84,109 @@ def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int):
 
         @pl.when(blk_max > kth_best)
         def _merge():
-            bs, bi = _extract_topk(s, gids, k)
-            cs = jnp.concatenate([run_s_ref[...], bs], axis=-1)   # (B, 2k)
-            ci = jnp.concatenate([run_i_ref[...], bi], axis=-1)
-            ms, mi = _extract_topk(cs, ci, k)
-            run_s_ref[...] = ms
-            run_i_ref[...] = mi
+            bb = s.shape[0]
+            if pad_w:
+                s_p = jnp.concatenate(
+                    [s, jnp.full((bb, pad_w), _NEG, jnp.float32)], axis=-1)
+                i_p = jnp.concatenate(
+                    [gids, jnp.full((bb, pad_w), _BIG, jnp.int32)], axis=-1)
+            else:
+                s_p, i_p = s, gids
+            fs = s_p.reshape(bb, fold_r, fold_w)
+            fi = i_p.reshape(bb, fold_r, fold_w)
+            rs = run_s_ref[...]
+            ri = run_i_ref[...]
+            out_s, out_i = [], []
+            for _ in range(k):
+                # stage 1 — partial reduce: lane fold over the R sub-strips
+                # (sublane-axis max; min id among in-lane ties)
+                lane_s = jnp.max(fs, axis=1)                     # (bb, W)
+                lane_i = jnp.min(
+                    jnp.where(fs >= lane_s[:, None, :], fi, _BIG), axis=1)
+                # stage 2 — merge: extract the global max of the (bb, k+W)
+                # candidate buffer = running list ∪ lane maxes. Each lane
+                # max is the max of its unextracted elements, so the buffer
+                # max is the true max of (running ∪ strip remainder).
+                cs = jnp.concatenate([rs, lane_s], axis=-1)
+                ci = jnp.concatenate([ri, lane_i], axis=-1)
+                m = jnp.max(cs, axis=-1)                         # (bb,)
+                sel = jnp.min(
+                    jnp.where(cs >= m[:, None], ci, _BIG), axis=-1)
+                out_s.append(m)
+                out_i.append(sel)
+                # id-keyed removal (element-wise); next pass's lane fold
+                # repairs the affected lane's max
+                fs = jnp.where(fi == sel[:, None, None], _NEG, fs)
+                rs = jnp.where(ri == sel[:, None], _NEG, rs)
+            run_s_ref[...] = jnp.stack(out_s, axis=-1)
+            run_i_ref[...] = jnp.stack(out_i, axis=-1)
 
         @pl.when(i == nblocks - 1)
         def _finish():
             out_s_ref[...] = run_s_ref[...]
-            out_i_ref[...] = jnp.maximum(run_i_ref[...], -1)      # pad ids -> -1
+            out_i_ref[...] = jnp.maximum(run_i_ref[...], -1)  # pad ids -> -1
 
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_b",
+                                             "n_valid", "interpret"))
 def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
-                      block_n: int = 1024, interpret: bool = True
+                      block_n: int = 1024, block_b: int = 128,
+                      n_valid: int | None = None, interpret: bool = True
                       ) -> tuple[jax.Array, jax.Array]:
     """Fused exact search: top-k of ``Q @ D^T`` per query row.
 
-    D: (n, m) index (f32/bf16/int8 — int8 scale must be pre-folded into Q).
-    Q: (B, m) queries. Returns (scores (B, k) f32, ids (B, k) int32).
+    D: (n, m) index, streamed in its own dtype (f32/bf16/int8 — int8 scale
+       must be pre-folded into Q; the strip is dequantised in-register).
+    Q: (B, m) queries. B is tiled into ``block_b``-row grid steps, so B may
+       exceed what fits VMEM-resident alongside an index strip.
+    ``n_valid``: logical row count; rows with id >= n_valid (e.g. device
+       padding in a sharded index) never surface in results.
+    Returns (scores (B, k) f32 sorted desc, ids (B, k) int32; -1 pads).
     """
     n, m = D.shape
     B = Q.shape[0]
+    nv = n if n_valid is None else min(n_valid, n)
     block_n = min(block_n, max(8, n))
     nblocks = -(-n // block_n)
-    pad = nblocks * block_n - n
-    if pad:
-        D = jnp.pad(D, ((0, pad), (0, 0)))
+    pad_rows = nblocks * block_n - n
+    if pad_rows:
+        D = jnp.pad(D, ((0, pad_rows), (0, 0)))   # dtype-preserving
     Qf = Q.astype(jnp.float32)
-    Df = D.astype(jnp.float32) if D.dtype == jnp.int8 else D
+    block_b = max(1, min(block_b, _round_up(B, 8)))
+    b_pad = _round_up(B, block_b)
+    if b_pad != B:
+        Qf = jnp.pad(Qf, ((0, b_pad - B), (0, 0)))
+    nbt = b_pad // block_b
+    # two-stage select geometry: W-wide candidate lanes (~2k, lane-aligned),
+    # R sub-strips folded per lane
+    fold_w = min(block_n, _round_up(2 * k, 128))
+    fold_r = -(-block_n // fold_w)
 
-    kernel = _make_kernel(k, n, block_n, nblocks)
+    kernel = _make_kernel(k, nv, block_n, nblocks, fold_w, fold_r)
     out_s, out_i = pl.pallas_call(
         kernel,
-        grid=(nblocks,),
+        grid=(nbt, nblocks),
         in_specs=[
-            pl.BlockSpec((B, m), lambda i: (0, 0)),          # Q resident
-            pl.BlockSpec((block_n, m), lambda i: (i, 0)),    # D strip streams
+            pl.BlockSpec((block_b, m), lambda b, i: (b, 0)),  # Q tile resident
+            pl.BlockSpec((block_n, m), lambda b, i: (i, 0)),  # D strip streams
         ],
         out_specs=[
-            pl.BlockSpec((B, k), lambda i: (0, 0)),
-            pl.BlockSpec((B, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, k), lambda b, i: (b, 0)),
+            pl.BlockSpec((block_b, k), lambda b, i: (b, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, k), jnp.float32),
-            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
         ],
         scratch_shapes=[
-            _scratch((B, k), jnp.float32),
-            _scratch((B, k), jnp.int32),
+            _scratch((block_b, k), jnp.float32),
+            _scratch((block_b, k), jnp.int32),
         ],
         interpret=interpret,
-    )(Qf, Df)
-    return out_s, out_i
+    )(Qf, D)
+    return out_s[:B], out_i[:B]
 
 
 def _scratch(shape, dtype):

@@ -16,17 +16,19 @@ global top-k merge). On a CPU-only host, ``--host-devices N`` forces an
 N-way mesh via ``XLA_FLAGS=--xla_force_host_platform_device_count`` —
 the same code path a TPU pod takes, minus the speed. ``--backend pallas``
 selects the fused score-and-select kernel for the (per-shard) scan.
+``--merge hierarchical`` factors the device count into a 2-D mesh and
+merges per-shard candidates in two all-gather stages (k·(a+b) candidates
+per device instead of k·a·b).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 --dim 256 \
       --cutoff 0.5 --queries 256 --batch 32
   PYTHONPATH=src python -m repro.launch.serve --sharded --host-devices 4 \
-      --backend pallas
+      --backend pallas --merge hierarchical
 """
 from __future__ import annotations
 
 import argparse
-import os
 import queue
 import threading
 import time
@@ -37,6 +39,7 @@ import numpy as np
 
 from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
 from repro.data.synthetic import make_dataset
+from repro.util import force_host_device_count
 
 
 class BatchingQueue:
@@ -76,6 +79,11 @@ class RetrievalServer:
     Both index types expose ``search(q, k) -> (scores, ids)``; the sharded
     one fans the batch out over the mesh and merges per-shard top-k, so the
     server loop is layout-agnostic.
+
+    The worker loop records every executed batch (size, service seconds) so
+    achieved batch occupancy and worker-side qps — queries / time the model
+    actually ran, excluding queue idle — are reportable next to the
+    client-side numbers.
     """
 
     def __init__(self, index: DenseIndex | ShardedDenseIndex,
@@ -84,7 +92,9 @@ class RetrievalServer:
         self.index = index
         self.pruner = pruner
         self.k = k
+        self.max_batch = max_batch
         self.batcher = BatchingQueue(max_batch=max_batch)
+        self.batch_log: list[tuple[int, float]] = []   # (size, service_s)
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
@@ -95,32 +105,65 @@ class RetrievalServer:
             if item is None:
                 continue
             vecs, replies = item
+            t0 = time.perf_counter()
             q = jnp.asarray(vecs)
             if self.pruner is not None:
                 q = self.pruner.transform_queries(q)
             scores, ids = self.index.search(q, k=self.k)
             scores = np.asarray(scores)
             ids = np.asarray(ids)
+            self.batch_log.append((len(replies), time.perf_counter() - t0))
             for i, r in enumerate(replies):
                 r.put((scores[i], ids[i]))
 
     def query(self, qvec: np.ndarray, timeout: float = 10.0):
         return self.batcher.submit(qvec).get(timeout=timeout)
 
+    def worker_stats(self) -> dict:
+        """Achieved occupancy + worker-side qps from the executed batches."""
+        if not self.batch_log:
+            return dict(batches=0, mean_batch=0.0, occupancy=0.0,
+                        worker_qps=0.0)
+        sizes = np.array([s for s, _ in self.batch_log], dtype=np.float64)
+        secs = np.array([t for _, t in self.batch_log], dtype=np.float64)
+        return dict(batches=len(self.batch_log),
+                    mean_batch=float(sizes.mean()),
+                    occupancy=float(sizes.mean() / self.max_batch),
+                    worker_qps=float(sizes.sum() / max(secs.sum(), 1e-9)))
+
     def close(self):
         self._stop.set()
         self._worker.join(timeout=2.0)
 
 
-def _force_host_devices(n: int) -> None:
-    """Ask XLA for an n-way host platform. Only effective before the JAX
-    backend initialises — call first thing in main, before any array op."""
-    if n <= 1:
-        return
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = (
-            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+def _serve_mesh(ndev: int, merge: str):
+    """1-D mesh for the flat merge; the squarest 2-D factoring for the
+    hierarchical one (a 1-long second axis degenerates to flat anyway)."""
+    if merge == "hierarchical":
+        a = next(d for d in range(int(ndev ** 0.5), 0, -1) if ndev % d == 0)
+        if a > 1:
+            return jax.make_mesh((a, ndev // a), ("row", "col"))
+    return jax.make_mesh((ndev,), ("data",))
+
+
+def _drive(server: RetrievalServer, Q: np.ndarray) -> tuple[float, np.ndarray]:
+    """Issue every query in array order; (wall seconds, per-query latency s).
+
+    Both sides of ``--compare-full`` go through this, so the query order,
+    count, and batching pattern are identical — speedups are apples to
+    apples. One untimed warmup query absorbs compilation; its batch is
+    dropped from the worker log so occupancy/worker-qps reflect steady
+    state, matching the client-side numbers.
+    """
+    server.query(Q[0])
+    server.batch_log.clear()
+    lat = np.empty(len(Q))
+    t0 = time.perf_counter()
+    for i in range(len(Q)):
+        t = time.perf_counter()
+        server.query(Q[i])
+        lat[i] = time.perf_counter() - t
+    return time.perf_counter() - t0, lat
 
 
 def main() -> None:
@@ -140,10 +183,14 @@ def main() -> None:
                          "platforms or once JAX is initialised)")
     ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
                     help="scan backend for the (per-shard) score+top-k")
+    ap.add_argument("--merge", choices=("flat", "hierarchical"),
+                    default="flat",
+                    help="sharded candidate merge: one all-gather over "
+                         "every device, or two stages over a factored mesh")
     ap.add_argument("--quantize-int8", action="store_true")
     args = ap.parse_args()
 
-    _force_host_devices(args.host_devices or (4 if args.sharded else 0))
+    force_host_device_count(args.host_devices or (4 if args.sharded else 0))
 
     print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
     ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,
@@ -156,13 +203,15 @@ def main() -> None:
     pruned = pruner.prune_index(D)
     if args.sharded:
         ndev = jax.device_count()
-        mesh = jax.make_mesh((ndev,), ("data",))
+        mesh = _serve_mesh(ndev, args.merge)
         index = ShardedDenseIndex.build(pruned, mesh,
                                         quantize_int8=args.quantize_int8,
-                                        backend=args.backend)
+                                        backend=args.backend,
+                                        merge=args.merge)
         print(f"[serve] sharded index: {index.n} x {index.dim} over "
-              f"{ndev} devices ({index.nbytes/2**20:.1f} MiB, "
-              f"backend={args.backend})")
+              f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"({index.nbytes/2**20:.1f} MiB, backend={args.backend}, "
+              f"merge={args.merge})")
     else:
         index = DenseIndex.build(pruned, quantize_int8=args.quantize_int8,
                                  backend=args.backend)
@@ -170,26 +219,22 @@ def main() -> None:
               f"({index.nbytes/2**20:.1f} MiB)")
 
     server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch)
-    lat = []
-    t0 = time.time()
-    for i in range(args.queries):
-        t = time.time()
-        server.query(Q[i])
-        lat.append(time.time() - t)
-    wall = time.time() - t0
+    wall, lat = _drive(server, Q)
+    stats = server.worker_stats()
     server.close()
-    lat_ms = np.array(lat) * 1e3
+    lat_ms = lat * 1e3
     print(f"[serve] pruned: {args.queries / wall:.1f} qps  "
           f"p50={np.percentile(lat_ms, 50):.2f}ms "
           f"p99={np.percentile(lat_ms, 99):.2f}ms")
+    print(f"[serve] worker: {stats['worker_qps']:.1f} qps over "
+          f"{stats['batches']} batches, mean batch "
+          f"{stats['mean_batch']:.1f}/{args.batch} "
+          f"({stats['occupancy']*100:.0f}% occupancy)")
 
     if args.compare_full:
         full = DenseIndex.build(D)
         server2 = RetrievalServer(full, None, k=args.k, max_batch=args.batch)
-        t0 = time.time()
-        for i in range(args.queries):
-            server2.query(Q[i])
-        wall_full = time.time() - t0
+        wall_full, _ = _drive(server2, Q)   # identical query order/batching
         server2.close()
         print(f"[serve] full:   {args.queries / wall_full:.1f} qps  "
               f"speedup={wall_full / wall:.2f}x "

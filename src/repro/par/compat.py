@@ -38,7 +38,7 @@ from jax.sharding import AbstractMesh
 
 __all__ = [
     "JAX_VERSION", "HAS_NATIVE_SHARD_MAP", "HAS_PCAST",
-    "shard_map", "mark_varying", "abstract_mesh", "axis_size",
+    "shard_map", "mark_varying", "abstract_mesh", "axis_size", "axis_index",
     "shard_map_eqn_body", "shard_map_eqn_device_count",
 ]
 
@@ -120,6 +120,27 @@ else:
         trace time, so this is free inside jit/shard_map.
         """
         return jax.lax.psum(1, axis)
+
+
+def axis_index(axis) -> jax.Array:
+    """Flat linear index over one or more named mesh axes (row-major).
+
+    Newer JAX accepts a tuple of axis names directly; older releases only
+    take a single name, so the flat index is folded manually as
+    ``idx = idx * size(ax) + axis_index(ax)`` — identical row-major order.
+    """
+    if isinstance(axis, str):
+        return jax.lax.axis_index(axis)
+    names = tuple(axis)
+    if len(names) == 1:
+        return jax.lax.axis_index(names[0])
+    try:
+        return jax.lax.axis_index(names)
+    except (TypeError, ValueError):
+        idx = jax.lax.axis_index(names[0])
+        for name in names[1:]:
+            idx = idx * axis_size(name) + jax.lax.axis_index(name)
+        return idx
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,10 @@ multi-device meshes on CPU-only CI.
 conftest is imported before any test module, i.e. before the JAX backend
 initialises — the only window in which XLA_FLAGS still takes effect. An
 operator-set XLA_FLAGS with an explicit device count wins.
+
+(Deliberately inlined rather than importing repro.util — conftest must not
+depend on sys.path being configured yet; keep in sync with
+``repro.util.force_host_device_count``.)
 """
 import os
 

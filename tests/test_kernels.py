@@ -101,6 +101,135 @@ def test_topk_duplicate_scores_tiebreak():
     assert set(np.asarray(ids)[0].tolist()) == set(range(8))
 
 
+def _quantized(D):
+    from repro.core.quantization import quantize_int8_per_dim
+    return quantize_int8_per_dim(D)
+
+
+@pytest.mark.parametrize("B", [1, 8, 64])
+@pytest.mark.parametrize("dtype", ["f32", "bf16", "int8"])
+def test_topk_parity_scan_topk(dtype, B):
+    """Kernel vs the jnp oracle on every index dtype, with block_b=16 so
+    B=64 crosses the batch-tile boundary (and B=1 exercises tile padding)."""
+    from repro.core.index import _scan_topk
+    D = _rand((1000, 64), jnp.float32)
+    Q = _rand((B, 64), jnp.float32)
+    if dtype == "int8":
+        D, scale = _quantized(D)
+        Q = Q * scale[None, :]
+    elif dtype == "bf16":
+        D = D.astype(jnp.bfloat16)
+    s1, i1 = ops.topk_score(D, Q, k=10, block_n=256, block_b=16,
+                            interpret=True)
+    s2, i2 = _scan_topk(D, Q, 10, block=256)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_batch_not_multiple_of_tile():
+    from repro.core.index import _scan_topk
+    D = _rand((500, 32), jnp.float32)
+    Q = _rand((10, 32), jnp.float32)
+    s1, i1 = ops.topk_score(D, Q, k=7, block_n=128, block_b=8, interpret=True)
+    s2, i2 = _scan_topk(D, Q, 7, block=128)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_topk_int8_streams_native():
+    """The array handed to pallas_call must keep the index dtype — an int8
+    corpus streams as int8, with no fp32 shadow copy at any size."""
+    D, scale = _quantized(_rand((300, 32), jnp.float32))
+    Q = _rand((4, 32), jnp.float32) * scale[None, :]
+
+    def find_pallas_eqn(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                return eqn
+        for sub in jax.core.subjaxprs(jaxpr):
+            got = find_pallas_eqn(sub)
+            if got is not None:
+                return got
+        return None
+
+    jaxpr = jax.make_jaxpr(
+        lambda d, q: ops.topk_score(d, q, k=5, interpret=True))(D, Q)
+    eqn = find_pallas_eqn(jaxpr.jaxpr)
+    assert eqn is not None
+    in_dtypes = {str(v.aval.dtype) for v in eqn.invars}
+    assert "int8" in in_dtypes
+    # and no fp32 operand the size of the corpus anywhere in the trace
+    corpus_elems = D.shape[0] * D.shape[1]
+    for v in eqn.invars:
+        if str(v.aval.dtype) == "float32":
+            assert np.prod(v.aval.shape) < corpus_elems
+
+
+def test_topk_all_tied_across_strips():
+    """Every score identical over multiple strips: min-id tie-break must
+    match jax.lax.top_k first-occurrence order exactly."""
+    row = RNG.standard_normal(16).astype(np.float32)
+    D = jnp.asarray(np.tile(row, (300, 1)))
+    Q = jnp.asarray(np.stack([row, 2 * row]))
+    s, ids = ops.topk_score(D, Q, k=9, block_n=64, interpret=True)
+    _, want = ref.topk_score_ref(D, Q, k=9)
+    assert (np.asarray(ids) == np.asarray(want)).all()
+    assert (np.asarray(ids) == np.arange(9)[None, :]).all()
+
+
+def test_topk_k_equals_n():
+    D = _rand((96, 16), jnp.float32)
+    Q = _rand((3, 16), jnp.float32)
+    s1, i1 = ops.topk_score(D, Q, k=96, block_n=32, interpret=True)
+    s2, i2 = ref.topk_score_ref(D, Q, k=96)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_topk_strip_entirely_padding():
+    """n_valid cuts the corpus mid-array: the second strip is 100% masked
+    (its max is -inf) and must be skipped without corrupting the running
+    list; no id >= n_valid may surface."""
+    from repro.core.index import _scan_topk
+    D = _rand((128, 16), jnp.float32)
+    Q = _rand((4, 16), jnp.float32)
+    s1, i1 = ops.topk_score(D, Q, k=5, block_n=64, n_valid=64, interpret=True)
+    s2, i2 = _scan_topk(D[:64], Q, 5, block=64)
+    assert int(np.asarray(i1).max()) < 64
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_every_strip_skippable():
+    """n_valid=0 masks every strip to -inf: the merge never runs and the
+    finish step must still write the init state (-inf scores, -1 ids)."""
+    D = _rand((256, 16), jnp.float32)
+    Q = _rand((3, 16), jnp.float32)
+    s, ids = ops.topk_score(D, Q, k=4, block_n=64, n_valid=0, interpret=True)
+    assert (np.asarray(ids) == -1).all()
+    assert np.isneginf(np.asarray(s)).all()
+
+
+def test_topk_block_skip_guard_parity():
+    """Top-k concentrated in the first strip: every later strip fails the
+    guard (strip max < kth best) yet the result must equal the oracle —
+    including when a later strip ties the kth best exactly (ascending id
+    order means the tie loses anyway)."""
+    base = RNG.standard_normal((256, 16)).astype(np.float32)
+    base[:8] *= 100.0          # first strip dominates
+    base[200] = base[7]        # exact tie with a kept row, larger id
+    D = jnp.asarray(base)
+    Q = jnp.asarray(base[:4] + 0.01 * RNG.standard_normal((4, 16))
+                    .astype(np.float32))
+    s1, i1 = ops.topk_score(D, Q, k=8, block_n=64, interpret=True)
+    s2, i2 = ref.topk_score_ref(D, Q, k=8)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # pca_project (+ quant epilogue)
 # ---------------------------------------------------------------------------

@@ -91,6 +91,87 @@ def test_sharded_pallas_backend_matches_jnp_4dev():
 
 
 @pytest.mark.parametrize("ndev", [1, 4])
+def test_sharded_hierarchical_matches_flat_1d(ndev):
+    """merge='hierarchical' on a 1-axis mesh degenerates to the flat single
+    stage — results must be bit-identical, and match the dense oracle."""
+    mesh = _mesh(ndev)
+    D, Q = _data(2048, 32)
+    idx = ShardedDenseIndex.build(D, mesh)
+    sf, if_ = idx.search(Q, k=10, merge="flat")
+    sh, ih = idx.search(Q, k=10, merge="hierarchical")
+    assert (np.asarray(sf) == np.asarray(sh)).all()
+    assert (np.asarray(if_) == np.asarray(ih)).all()
+    _, wids = DenseIndex.build(D).search(Q, k=10)
+    assert (np.asarray(ih) == np.asarray(wids)).all()
+
+
+def test_sharded_hierarchical_matches_flat_2d_mesh():
+    """2x2 mesh: the hierarchical merge really runs two all-gather stages
+    (within 'col', then across 'row') — bit-identical to the flat merge,
+    tied scores included."""
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    mesh = jax.make_mesh((2, 2), ("row", "col"))
+    D, Q = _data(1003, 16)          # uneven rows: device padding in play
+    # duplicate a row across shards so the merges must tie-break identically
+    D = D.at[900].set(D[5])
+    idx = ShardedDenseIndex.build(D, mesh, merge="hierarchical")
+    sh, ih = idx.search(Q, k=10)    # build-time default: hierarchical
+    sf, if_ = idx.search(Q, k=10, merge="flat")
+    assert (np.asarray(sf) == np.asarray(sh)).all()
+    assert (np.asarray(if_) == np.asarray(ih)).all()
+    _, wids = DenseIndex.build(D).search(Q, k=10)
+    assert (np.asarray(ih) == np.asarray(wids)).all()
+
+
+def test_sharded_hierarchical_int8_2d_mesh():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    mesh = jax.make_mesh((2, 2), ("row", "col"))
+    D, Q = _data(1001, 16)
+    D, Q = jnp.abs(D), -jnp.abs(Q)  # all real scores < 0 (pad-row trap)
+    idx = ShardedDenseIndex.build(D, mesh, quantize_int8=True,
+                                  merge="hierarchical")
+    s, ids = idx.search(Q, k=7)
+    _, wids = DenseIndex.build(D, quantize_int8=True).search(Q, k=7)
+    assert int(ids.max()) < 1001
+    assert float(s.max()) < 0.0
+    assert (np.asarray(ids) == np.asarray(wids)).all()
+
+
+def test_sharded_pad_rows_cannot_displace_real_candidates():
+    """Device-padding rows score 0.0 — above every real score here — and
+    would win the padded shard's local top-k before any post-hoc mask. The
+    shard-local select must over-fetch (k+pad) so the shard's true top-k
+    real rows survive. Regression: the global top-k is concentrated in the
+    padded (last) shard."""
+    mesh = _mesh(4)
+    n, k = 29, 4                     # 29 % 4 = 1 -> 3 pad rows, last shard
+    D = np.abs(RNG.standard_normal((n, 8))).astype(np.float32)
+    D[-k:] *= 0.01                   # last shard holds the least-negative rows
+    D, Q = jnp.asarray(D), -jnp.abs(
+        jnp.asarray(RNG.standard_normal((3, 8)), jnp.float32))
+    for merge in ("flat", "hierarchical"):
+        s, ids = ShardedDenseIndex.build(D, mesh).search(Q, k=k, merge=merge)
+        ws, wids = DenseIndex.build(D).search(Q, k=k)
+        assert (np.asarray(ids) == np.asarray(wids)).all()
+        np.testing.assert_allclose(np.asarray(s), np.asarray(ws),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_k_exceeds_shard_rows():
+    """k larger than any single shard's row count: the per-shard scan pads
+    with sentinels and the global merge must still match the dense oracle."""
+    mesh = _mesh(4)
+    D, Q = _data(20, 8)             # 5 rows per shard < k=10
+    s, ids = ShardedDenseIndex.build(D, mesh).search(Q, k=10)
+    ws, wids = DenseIndex.build(D).search(Q, k=10)
+    assert (np.asarray(ids) == np.asarray(wids)).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ws),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("ndev", [1, 4])
 def test_fit_pca_distributed_matches_serial(ndev):
     mesh = _mesh(ndev)
     D, _ = _data(1003, 24)   # uneven rows: gram_distributed zero-pads
