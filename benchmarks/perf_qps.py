@@ -14,6 +14,9 @@ returns a JSON-ready dict.
 """
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
 import time
 from functools import partial
 
@@ -23,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
 from repro.core.index import _scan_topk, _topk_merge
+from repro.core.store import IndexStore, save_index
 from repro.kernels import ops as kops
 
 N_DOCS = 100_000
@@ -207,6 +211,36 @@ def run(emit=print) -> dict:
     Dh = pruner.prune_index(D)
     _, ids_ref_pruned = DenseIndex.build(Dh).search(qh, k=K)
     results["sweep"] = _sweep(Dh, qh, np.asarray(ids_ref_pruned), emit)
+
+    # cold start: committed on-disk artifact -> first answered query — the
+    # restart path ``serve.py --load-index`` takes. One-shot by nature
+    # (page cache + jit compile are part of the cost being measured).
+    tmpdir = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        store_path = os.path.join(tmpdir, "idx")
+        save_index(store_path, DenseIndex.build(Dh), pruner=pruner)
+        t0 = time.perf_counter()
+        st = IndexStore.open(store_path)
+        idx_cold = DenseIndex.load(st)
+        jax.block_until_ready(
+            idx_cold.search(st.load_pruner().transform_queries(Q), k=K))
+        cold_dense = (time.perf_counter() - t0) * 1e6
+        emit(f"cold_start_dense,{cold_dense:.0f},n={st.n} bytes={st.nbytes}")
+        results["cold_start"] = dict(dense_us=cold_dense, n=int(st.n),
+                                     nbytes=int(st.nbytes))
+        if jax.device_count() > 1:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            t0 = time.perf_counter()
+            st = IndexStore.open(store_path)
+            sidx_cold = ShardedDenseIndex.load(st, mesh)
+            jax.block_until_ready(sidx_cold.search(qh, k=K))
+            cold_sh = (time.perf_counter() - t0) * 1e6
+            emit(f"cold_start_sharded,{cold_sh:.0f},"
+                 f"ndev={jax.device_count()}")
+            results["cold_start"]["sharded_us"] = cold_sh
+            results["cold_start"]["ndev"] = int(jax.device_count())
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
 
     # select-path A/B: two-stage + block-skip scan vs legacy concat select.
     # Same arrays, same block size — isolates the selection machinery.

@@ -1,4 +1,8 @@
 """Fault-tolerance substrate: async sharded checkpoints, elastic restore."""
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint.manager import (
+    CheckpointManager, save_pytree, load_pytree,
+    commit_dir, fsync_dir, fsync_file, write_json_fsync,
+)
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree",
+           "commit_dir", "fsync_dir", "fsync_file", "write_json_fsync"]

@@ -67,6 +67,63 @@ def _spec_from_json(parts: list) -> P:
     return P(*[tuple(p) if isinstance(p, list) else p for p in parts])
 
 
+def fsync_file(path: str) -> None:
+    """fsync an already-written file so it survives a crash after rename."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so the entries (incl. a rename) are durable.
+
+    Best-effort on platforms where directories can't be opened/fsynced.
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def write_json_fsync(path: str, obj: Any) -> None:
+    """Write JSON and fsync the file before returning."""
+    with open(path, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def commit_dir(tmp: str, path: str) -> None:
+    """Atomically publish ``tmp`` as ``path`` (rename + parent-dir fsync).
+
+    Callers must have fsynced every file inside ``tmp`` first — the rename
+    is the commit point, so anything not durable before it can be lost
+    while the directory still looks committed.
+
+    Replacing an existing committed ``path`` renames it aside first and
+    deletes it only after the new directory is in place — at no instant is
+    there no committed artifact on disk (a crash leaves either the old or
+    the new one, never a bare ``.tmp``).
+    """
+    old = path + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(path):
+        os.rename(path, old)
+    os.rename(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
+    if os.path.exists(old):
+        shutil.rmtree(old)
+
+
 def save_pytree(path: str, tree: Any, spec_tree: Any | None = None,
                 extra: dict | None = None) -> None:
     """Synchronous atomic save of a pytree (+ optional PartitionSpec tree)."""
@@ -80,19 +137,16 @@ def save_pytree(path: str, tree: Any, spec_tree: Any | None = None,
     for name, leaf in leaves:
         arr = np.asarray(leaf)
         fname = name.replace("/", "__") + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        fsync_file(fpath)
         manifest["leaves"].append({
             "path": name, "file": fname, "shape": list(arr.shape),
             "dtype": str(arr.dtype),
             "spec": _spec_to_json(specs.get(name)),
         })
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)
+    write_json_fsync(os.path.join(tmp, "manifest.json"), manifest)
+    commit_dir(tmp, path)
 
 
 def load_pytree(path: str, target: Any, mesh: Mesh | None = None,

@@ -8,6 +8,7 @@ from repro.core.pca import (
 )
 from repro.core.pruning import StaticPruner
 from repro.core.index import DenseIndex, ShardedDenseIndex
+from repro.core.store import IndexStore, IndexStoreError, save_index
 from repro.core import metrics
 from repro.core import quantization
 from repro.core import table_compress
@@ -18,5 +19,6 @@ __all__ = [
     "transform", "transform_query", "inverse_transform",
     "m_from_cutoff", "cutoff_from_m", "m_for_variance", "explained_variance_ratio",
     "save_pca", "load_pca", "StaticPruner", "DenseIndex", "ShardedDenseIndex",
+    "IndexStore", "IndexStoreError", "save_index",
     "metrics", "quantization",
 ]

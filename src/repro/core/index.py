@@ -16,6 +16,7 @@ Scores are always accumulated in fp32 regardless of index dtype.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Literal
 
@@ -180,6 +181,24 @@ class DenseIndex:
             v = v.astype(dtype)
         return cls(vectors=v, scale=None, backend=backend)
 
+    @classmethod
+    def load(cls, store, *, backend: Backend = "jnp") -> "DenseIndex":
+        """Load from an on-disk ``IndexStore`` (path or open handle).
+
+        Chunks are memory-mapped and copied to device one at a time — the
+        host never holds a full-index copy beyond the OS page cache.
+        """
+        from repro.core.store import IndexStore
+        if isinstance(store, (str, os.PathLike)):
+            store = IndexStore.open(store)
+        parts = [jnp.asarray(np.ascontiguousarray(c))
+                 for c in store.iter_chunks()]
+        vectors = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        s = store.scale()
+        return cls(vectors=vectors,
+                   scale=None if s is None else jnp.asarray(s),
+                   backend=backend)
+
     def _dequeries(self, queries: jax.Array) -> jax.Array:
         """Fold the int8 scale into the query side: (Dq) = (D_int8)(s ⊙ q)."""
         q = jnp.atleast_2d(queries)
@@ -188,14 +207,23 @@ class DenseIndex:
         return q
 
     def search(self, queries: jax.Array, k: int = 10,
-               block: int = 65536) -> tuple[jax.Array, jax.Array]:
-        """Exact top-k. Returns (scores (B,k) fp32, ids (B,k) int32)."""
+               block: int | None = None) -> tuple[jax.Array, jax.Array]:
+        """Exact top-k. Returns (scores (B,k) fp32, ids (B,k) int32).
+
+        ``block`` is the scan strip size. ``None`` picks the backend
+        default (65536 rows for the jnp scan, the kernel's ``block_n`` for
+        pallas); an explicit value is honoured on *both* backends — it used
+        to be silently dropped on pallas, so serve-time tuning did nothing.
+        """
         q = self._dequeries(queries)
         k = min(k, self.n)
         if self.backend == "pallas":
             from repro.kernels import ops as kops
-            return kops.topk_score(self.vectors, q, k=k)
-        return _scan_topk(self.vectors, q, k, block=block)
+            if block is None:
+                return kops.topk_score(self.vectors, q, k=k)
+            return kops.topk_score(self.vectors, q, k=k, block_n=block)
+        return _scan_topk(self.vectors, q, k,
+                          block=65536 if block is None else block)
 
 
 @dataclasses.dataclass
@@ -247,6 +275,50 @@ class ShardedDenseIndex:
         v = jax.device_put(v, sharding)
         return cls(vectors=v, mesh=mesh, scale=scale, backend=backend,
                    merge=merge, n_real=n)
+
+    @classmethod
+    def load(cls, store, mesh: Mesh, *,
+             backend: Backend = "jnp",
+             merge: Merge = "flat") -> "ShardedDenseIndex":
+        """Host-streamed sharded load from an on-disk ``IndexStore``.
+
+        Each device's row range is sliced out of the memory-mapped chunks
+        (host memory O(shard), one shard live at a time), placed on that
+        device, and the global array assembled with
+        ``jax.make_array_from_single_device_arrays`` — no full-index host
+        copy and no single-device ``device_put`` ever materialises, so the
+        index may exceed one host's RAM. Device-padding rows for n not
+        divisible by the device count are synthesised at load.
+        """
+        from repro.core.store import IndexStore
+        if isinstance(store, (str, os.PathLike)):
+            store = IndexStore.open(store)
+        axes = tuple(mesh.axis_names)
+        n, m = store.n, store.dim
+        ndev = int(np.prod(mesh.devices.shape))
+        pad = (-n) % ndev
+        n_padded = n + pad
+        sharding = NamedSharding(mesh, P(axes, None))
+        shape = (n_padded, m)
+        shards = []
+        for device, index in sharding.addressable_devices_indices_map(shape).items():
+            rows = index[0]
+            start, stop = rows.start or 0, rows.stop if rows.stop is not None else n_padded
+            # clamp to the real rows: a shard may be partly — or, when
+            # n < (ndev-1)·rows_per, entirely — device padding
+            lo, hi = min(start, n), min(stop, n)
+            local = store.read_rows(lo, hi)
+            if stop - start > hi - lo:   # synthesise this shard's padding rows
+                local = np.concatenate(
+                    [local, np.zeros(((stop - start) - (hi - lo), m),
+                                     store.dtype)], axis=0)
+            shards.append(jax.device_put(local, device))
+            del local
+        vectors = jax.make_array_from_single_device_arrays(shape, sharding, shards)
+        s = store.scale()
+        return cls(vectors=vectors, mesh=mesh,
+                   scale=None if s is None else jnp.asarray(s),
+                   backend=backend, merge=merge, n_real=n)
 
     @property
     def n(self) -> int:

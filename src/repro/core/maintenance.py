@@ -6,12 +6,19 @@ this module turns those findings into operational policy:
 
   * ``IndexUpdater.add_documents`` — new documents are rotated with the
     EXISTING ``W_m`` and appended (no refit, no reindex of old docs): the
-    offline artefact stays valid as the corpus grows.
+    offline artefact stays valid as the corpus grows. With a ``store``
+    attached, every append also lands durably on disk, so incremental
+    growth survives a restart.
   * ``drift_score`` — fraction of new-batch embedding energy captured by
     the kept subspace, ``||X W_m||² / ||X||²``, compared to the energy the
     subspace captured at fit time. A ratio near 1 ⇒ the rotation still
     fits (paper RQ2 regime); a falling ratio quantifies when the corpus
     distribution has moved enough to warrant an offline refit.
+  * ``clip_fraction`` — int8 appends quantise with the *frozen* per-dim
+    scale; values outside ±127·scale silently clip, degrading scores with
+    no signal in the drift metric (clipping is per-value, drift is
+    per-subspace). The updater tracks the fraction of clipped values over
+    everything appended so far and folds it into ``needs_refit``.
   * ``needs_refit`` — thresholded policy hook for the serving controller.
 """
 from __future__ import annotations
@@ -20,6 +27,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.index import DenseIndex
 from repro.core.pruning import StaticPruner
@@ -36,41 +44,126 @@ def captured_energy(X: jax.Array, pruner: StaticPruner) -> float:
 
 @dataclasses.dataclass
 class IndexUpdater:
-    """Pruned index + transform with incremental growth and drift tracking."""
+    """Pruned index + transform with incremental growth and drift tracking.
+
+    ``fit_energy`` may be left unset (a directly-constructed updater): the
+    reference energy is then derived lazily from the fitted state — for an
+    uncentered fit ``||D W_m||²/||D||² = Σ_{i≤m} λ_i / Σ λ_i``, and a
+    centered fit adds the mean's energy on both sides (see
+    ``_reference_energy``) — exact either way, so no fit-corpus pass is
+    needed.
+
+    ``store``: an optional ``IndexStore`` (or path) the updater appends
+    through — each ``add_documents`` block is durably appended so the
+    on-disk artifact tracks the in-memory index.
+    """
 
     pruner: StaticPruner
     index: DenseIndex
-    fit_energy: float = None  # energy on the fit corpus (reference point)
+    fit_energy: float | None = None  # energy on the fit corpus (reference)
+    store: object | None = None      # IndexStore | str | None
+    # int8 clip telemetry over everything appended so far
+    clipped_values: int = 0
+    appended_values: int = 0
+
+    def __post_init__(self):
+        from repro.core.store import IndexStore
+        if isinstance(self.store, (str, bytes)) or hasattr(self.store, "__fspath__"):
+            self.store = IndexStore.open(self.store)
 
     @classmethod
     def build(cls, corpus: jax.Array, *, cutoff: float = 0.5,
-              quantize_int8: bool = False) -> "IndexUpdater":
+              quantize_int8: bool = False,
+              store_path: str | None = None) -> "IndexUpdater":
+        """Fit + build in memory; with ``store_path``, also persist the
+        artifact and attach the committed store for durable appends."""
         pruner = StaticPruner(cutoff=cutoff).fit(corpus)
         index = pruner.build_index(corpus, quantize_int8=quantize_int8)
+        store = None
+        if store_path is not None:
+            from repro.core.store import save_index
+            store = save_index(store_path, index, pruner=pruner)
         return cls(pruner=pruner, index=index,
-                   fit_energy=captured_energy(corpus, pruner))
+                   fit_energy=captured_energy(corpus, pruner), store=store)
 
-    def add_documents(self, new_embs: jax.Array) -> None:
-        """Rotate with the existing W_m and append (no refit)."""
+    @classmethod
+    def from_store(cls, store, *, backend: str = "jnp") -> "IndexUpdater":
+        """Rehydrate updater state from a committed artifact (cold start).
+
+        ``fit_energy`` stays lazy — the fit corpus is not in the store, and
+        the eigenvalue identity gives the same reference.
+        """
+        from repro.core.store import IndexStore
+        if not isinstance(store, IndexStore):
+            store = IndexStore.open(store)
+        return cls(pruner=store.load_pruner(),
+                   index=DenseIndex.load(store, backend=backend),
+                   store=store)
+
+    # -- incremental growth ------------------------------------------------
+    def add_documents(self, new_embs: jax.Array) -> float:
+        """Rotate with the existing W_m and append (no refit).
+
+        Returns this batch's int8 clip fraction (0.0 on float indexes):
+        the fraction of quantised values that fell outside ±127 under the
+        frozen per-dim scale and were clipped.
+        """
         pruned = self.pruner.prune_index(new_embs)
+        batch_clip = 0.0
         if self.index.scale is not None:
-            q = jnp.clip(jnp.round(pruned / self.index.scale[None, :]),
-                         -127, 127).astype(jnp.int8)
-            vectors = jnp.concatenate([self.index.vectors, q], axis=0)
+            raw = jnp.round(pruned / self.index.scale[None, :])
+            clipped = jnp.sum(jnp.abs(raw) > 127)
+            batch_clip = float(clipped) / max(raw.size, 1)
+            self.clipped_values += int(clipped)
+            self.appended_values += int(raw.size)
+            new = jnp.clip(raw, -127, 127).astype(jnp.int8)
         else:
-            vectors = jnp.concatenate(
-                [self.index.vectors, pruned.astype(self.index.vectors.dtype)],
-                axis=0)
-        self.index = DenseIndex(vectors=vectors, scale=self.index.scale,
-                                backend=self.index.backend)
+            new = pruned.astype(self.index.vectors.dtype)
+        self.index = DenseIndex(
+            vectors=jnp.concatenate([self.index.vectors, new], axis=0),
+            scale=self.index.scale, backend=self.index.backend)
+        if self.store is not None:
+            self.store.append(np.asarray(new))
+        return batch_clip
+
+    @property
+    def clip_fraction(self) -> float:
+        """Fraction of clipped values over every int8 append so far."""
+        if self.appended_values == 0:
+            return 0.0
+        return self.clipped_values / self.appended_values
+
+    # -- drift policy ------------------------------------------------------
+    def _reference_energy(self) -> float:
+        if self.fit_energy is None:
+            state = self.pruner.state
+            m = self.pruner.kept_dims
+            lam = np.asarray(state.eigenvalues, np.float64)
+            # captured_energy is an *uncentered* ratio. Uncentered fit:
+            # ||D W_m||²/||D||² = Σ_{i≤m} λ_i / Σ λ_i (mean is zeros, the
+            # correction terms vanish). Centered fit: the Gram is
+            # n·(C + μμᵀ), so the same ratio gains the mean's energy —
+            # (Σ_{i≤m} λ_i + ||W_mᵀμ||²) / (Σ λ_i + ||μ||²). Both exact.
+            mu = np.asarray(state.mean, np.float64)
+            W = np.asarray(state.components, np.float64)[:, :m]
+            num = float(lam[:m].sum()) + float(np.sum((W.T @ mu) ** 2))
+            den = float(lam.sum()) + float(np.sum(mu ** 2))
+            self.fit_energy = num / max(den, 1e-30)
+        return self.fit_energy
 
     def drift_score(self, new_embs: jax.Array) -> float:
         """1.0 = no drift; < 1.0 = kept subspace explains less energy on the
         new batch than it did on the fit corpus."""
-        return captured_energy(new_embs, self.pruner) / max(self.fit_energy,
-                                                            1e-12)
+        return captured_energy(new_embs, self.pruner) / max(
+            self._reference_energy(), 1e-12)
 
-    def needs_refit(self, new_embs: jax.Array, threshold: float = 0.9) -> bool:
+    def needs_refit(self, new_embs: jax.Array, threshold: float = 0.9,
+                    clip_threshold: float = 0.01) -> bool:
+        """Refit when the subspace drifted *or* the frozen int8 scale is
+        clipping more than ``clip_threshold`` of appended values — clipping
+        degrades scores even when the subspace still fits."""
+        if self.clip_fraction > clip_threshold:
+            return True
         return self.drift_score(new_embs) < threshold
 
     def refit(self, corpus: jax.Array) -> None:
@@ -81,6 +174,13 @@ class IndexUpdater:
                                    quantize_int8=quant)
         self.pruner, self.index, self.fit_energy = (fresh.pruner, fresh.index,
                                                     fresh.fit_energy)
+        self.clipped_values = self.appended_values = 0
+        if self.store is not None:
+            # the old artifact is invalid under the new rotation — replace
+            # it atomically at the same path
+            from repro.core.store import save_index
+            self.store = save_index(self.store.path, self.index,
+                                    pruner=self.pruner)
 
     def search(self, queries: jax.Array, k: int = 10):
         return self.index.search(self.pruner.transform_queries(queries), k=k)

@@ -98,6 +98,73 @@ class StaticPruner:
             return ShardedDenseIndex.build(pruned, mesh, quantize_int8=quantize_int8)
         return DenseIndex.build(pruned, quantize_int8=quantize_int8, backend=backend)
 
+    def build_index_to(self, path: str, corpus_batches, *,
+                       quantize_int8: bool = False,
+                       dtype: jnp.dtype | None = None,
+                       meta: dict | None = None):
+        """Streaming offline build: fit + prune + (quantize) straight to disk.
+
+        ``corpus_batches`` is the corpus as row blocks — either a sequence
+        of arrays or a zero-argument callable returning a fresh iterator
+        (the build makes up to three passes: Gram fit if not yet fitted,
+        per-dim absmax when ``quantize_int8``, then the write pass). A
+        one-shot generator is rejected loudly rather than silently yielding
+        an empty second pass.
+
+        Peak host memory is O(block_rows × d): each block is rotated,
+        optionally quantised with the corpus-wide per-dim scale, and
+        appended to the store; the full (n, d) corpus and the full (n, m)
+        pruned index never materialise. Returns the committed
+        ``IndexStore``.
+        """
+        from repro.core.store import IndexStore
+
+        def passes():
+            if callable(corpus_batches):
+                return iter(corpus_batches())
+            if isinstance(corpus_batches, (list, tuple)):
+                return iter(corpus_batches)
+            raise TypeError(
+                "corpus_batches must be a list/tuple of row blocks or a "
+                "zero-arg callable returning a fresh iterator: the streaming "
+                "build reads the corpus in multiple passes")
+
+        if self.state is None:
+            self.fit_streaming(passes())
+        m = self.kept_dims
+
+        scale = None
+        if quantize_int8:
+            absmax = np.zeros((m,), np.float32)
+            for b in passes():
+                p = np.asarray(_pca.transform(jnp.asarray(b), self.state, m),
+                               np.float32)
+                absmax = np.maximum(absmax, np.abs(p).max(axis=0))
+            scale = np.maximum(absmax, 1e-12) / 127.0
+
+        writer = IndexStore.create(path)
+        with writer:
+            writer.put_pca(self.state)
+            if scale is not None:
+                writer.set_scale(scale)
+            for b in passes():
+                p = np.asarray(_pca.transform(jnp.asarray(b), self.state, m),
+                               np.float32)
+                if scale is not None:
+                    blk = np.clip(np.round(p / scale[None, :]),
+                                  -127, 127).astype(np.int8)
+                elif dtype is not None:
+                    blk = np.asarray(jnp.asarray(p).astype(dtype))
+                else:
+                    blk = p
+                writer.append(blk)
+            info = dict(kept_dims=int(m), source_dim=int(self.state.d),
+                        cutoff=float(self.effective_cutoff),
+                        centered=bool(self.state.centered),
+                        quantize_int8=bool(quantize_int8))
+            info.update(meta or {})
+            return writer.commit(meta=info)
+
     # -- online application ----------------------------------------------------
     def transform_queries(self, q: jax.Array) -> jax.Array:
         """q̂ = W_mᵀq — the only per-query cost the method adds: O(dm)."""

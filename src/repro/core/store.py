@@ -1,0 +1,371 @@
+"""On-disk index artifact store: the paper's offline object, made durable.
+
+The whole point of static pruning is that it is *query independent and
+executed offline* — the deliverable is a reusable artifact, not a warm
+process. This module gives that artifact a versioned on-disk layout:
+
+    <dir>/
+      manifest.json          # version, n, dim, logical dtype, chunk list,
+                             # pca/scale file names, free-form meta
+      pca.npz                # PCAState (W, Λ, mean) — save_pca format
+      scale.npy              # per-dim int8 dequant scale (int8 stores only)
+      vectors_000000.npy     # row chunk 0
+      vectors_000001.npy     # row chunk 1 ...
+
+Durability reuses the checkpoint module's commit protocol: everything is
+written into ``<dir>.tmp`` with every blob fsynced, then the directory is
+atomically renamed into place and the parent fsynced — a crashed build can
+never be mistaken for a committed artifact, and ``IndexStore.open``
+validates the manifest against the blobs it names (version, chunk
+presence, per-chunk shape, row-count sum) so a tampered or partially
+copied directory is rejected loudly.
+
+Appends to a *committed* store (incremental corpus growth through
+``IndexUpdater``) use a blob-then-manifest protocol: the new chunk is
+written and fsynced first, then the manifest is atomically replaced
+(``os.replace`` + dir fsync). A crash between the two leaves an orphan
+blob the manifest never names — still a valid store.
+
+Reads are host-streamed: chunks are memory-mapped (``np.load(mmap_mode=
+'r')``), so assembling a device-resident index never needs a second full
+host copy — ``DenseIndex.load`` copies one chunk at a time to device, and
+``ShardedDenseIndex.load`` materialises one *shard* at a time on its
+target device and assembles the global array with
+``jax.make_array_from_single_device_arrays``.
+
+bfloat16 has no native ``.npy`` encoding; bf16 chunks are stored as raw
+``uint16`` views and re-viewed on load (the manifest keeps the logical
+dtype).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Iterator
+
+import numpy as np
+
+from repro.checkpoint.manager import (commit_dir, fsync_dir, fsync_file,
+                                      write_json_fsync)
+
+FORMAT_VERSION = 1
+MANIFEST = "manifest.json"
+PCA_FILE = "pca.npz"
+SCALE_FILE = "scale.npy"
+
+# logical dtypes with no native .npy encoding -> raw storage view
+_STORAGE_VIEW = {"bfloat16": np.uint16}
+
+
+class IndexStoreError(RuntimeError):
+    """A store directory is missing, corrupted, or inconsistent."""
+
+
+def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
+               chunk_rows: int = 262144) -> "IndexStore":
+    """Persist an already-built ``DenseIndex``/``ShardedDenseIndex``.
+
+    Rows are copied device→host one ``chunk_rows`` slice at a time, so the
+    host transient is O(chunk); only the logical ``index.n`` rows are
+    written (a sharded index's device-padding rows are dropped — the load
+    path re-synthesises them for whatever mesh it targets). Pass the fitted
+    ``pruner`` to persist the PCA state alongside (required for
+    ``IndexStore.load_pruner`` / ``serve --load-index`` to transform
+    queries).
+    """
+    import numpy as _np
+    writer = IndexStoreWriter(path)
+    with writer:
+        if pruner is not None:
+            writer.put_pca(pruner.state)
+        if index.scale is not None:
+            writer.set_scale(_np.asarray(index.scale))
+        v = index.vectors
+        n = index.n   # logical rows: excludes sharded device padding
+        for start in range(0, n, chunk_rows):
+            writer.append(_np.asarray(v[start:min(start + chunk_rows, n)]))
+        info = {} if pruner is None else dict(
+            kept_dims=int(pruner.kept_dims),
+            source_dim=int(pruner.state.d),
+            cutoff=float(pruner.effective_cutoff),
+            centered=bool(pruner.state.centered))
+        info["quantize_int8"] = index.scale is not None
+        info.update(meta or {})
+        return writer.commit(meta=info)
+
+
+def _as_numpy_dtype(logical: str):
+    if logical in _STORAGE_VIEW:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, logical))
+    return np.dtype(logical)
+
+
+def _logical_dtype_name(arr: np.ndarray) -> str:
+    return arr.dtype.name
+
+
+def _write_chunk(path: str, arr: np.ndarray) -> None:
+    view = _STORAGE_VIEW.get(arr.dtype.name)
+    np.save(path, arr.view(view) if view is not None else arr)
+    fsync_file(path)
+
+
+def _read_chunk(path: str, logical: str, mmap: bool = True) -> np.ndarray:
+    arr = np.load(path, mmap_mode="r" if mmap else None)
+    view = _STORAGE_VIEW.get(logical)
+    return arr.view(_as_numpy_dtype(logical)) if view is not None else arr
+
+
+class IndexStoreWriter:
+    """Streaming writer: append row chunks, then commit atomically.
+
+    Peak host memory is one chunk — nothing is buffered across ``append``
+    calls. ``dim``/``dtype`` are inferred from the first chunk and enforced
+    thereafter. Usable as a context manager (aborts on exception).
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self.tmp = self.path + ".tmp"
+        if os.path.exists(self.tmp):
+            shutil.rmtree(self.tmp)
+        os.makedirs(self.tmp)
+        self._chunks: list[dict] = []
+        self._n = 0
+        self._dim: int | None = None
+        self._dtype: str | None = None
+        self._has_pca = False
+        self._has_scale = False
+        self._committed = False
+
+    # -- content -----------------------------------------------------------
+    def put_pca(self, state) -> None:
+        """Persist the fitted PCAState alongside the vectors."""
+        from repro.core import pca as _pca
+        _pca.save_pca(os.path.join(self.tmp, PCA_FILE), state)
+        fsync_file(os.path.join(self.tmp, PCA_FILE))
+        self._has_pca = True
+
+    def set_scale(self, scale: np.ndarray) -> None:
+        """Per-dim dequant scale for int8 stores."""
+        scale = np.asarray(scale, np.float32)
+        path = os.path.join(self.tmp, SCALE_FILE)
+        np.save(path, scale)
+        fsync_file(path)
+        self._has_scale = True
+
+    def append(self, block: np.ndarray) -> None:
+        block = np.asarray(block)
+        if block.ndim != 2 or block.shape[0] == 0:
+            raise ValueError(f"append expects a non-empty (rows, dim) block, "
+                             f"got shape {block.shape}")
+        if self._dim is None:
+            self._dim = int(block.shape[1])
+            self._dtype = _logical_dtype_name(block)
+        if block.shape[1] != self._dim or block.dtype.name != self._dtype:
+            raise ValueError(
+                f"chunk mismatch: got ({block.shape[1]}, {block.dtype.name}), "
+                f"store is ({self._dim}, {self._dtype})")
+        fname = f"vectors_{len(self._chunks):06d}.npy"
+        _write_chunk(os.path.join(self.tmp, fname), block)
+        self._chunks.append({"file": fname, "rows": int(block.shape[0])})
+        self._n += int(block.shape[0])
+
+    # -- commit ------------------------------------------------------------
+    def commit(self, meta: dict | None = None) -> "IndexStore":
+        if self._committed:
+            raise IndexStoreError("writer already committed")
+        if not self._chunks:
+            raise IndexStoreError("commit on an empty store (no chunks)")
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "kind": "dense_index",
+            "n": self._n,
+            "dim": self._dim,
+            "dtype": self._dtype,
+            "chunks": self._chunks,
+            "pca_file": PCA_FILE if self._has_pca else None,
+            "scale_file": SCALE_FILE if self._has_scale else None,
+            "meta": meta or {},
+        }
+        write_json_fsync(os.path.join(self.tmp, MANIFEST), manifest)
+        commit_dir(self.tmp, self.path)
+        self._committed = True
+        return IndexStore.open(self.path)
+
+    def abort(self) -> None:
+        if not self._committed and os.path.exists(self.tmp):
+            shutil.rmtree(self.tmp)
+
+    def __enter__(self) -> "IndexStoreWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abort()
+
+
+@dataclasses.dataclass
+class IndexStore:
+    """Read/append handle on a committed artifact directory."""
+
+    path: str
+    manifest: dict
+
+    # -- open / validate ---------------------------------------------------
+    @classmethod
+    def create(cls, path: str) -> IndexStoreWriter:
+        return IndexStoreWriter(path)
+
+    @classmethod
+    def open(cls, path: str) -> "IndexStore":
+        path = str(path)
+        mpath = os.path.join(path, MANIFEST)
+        if not os.path.isfile(mpath):
+            raise IndexStoreError(
+                f"{path}: not a committed index store (no {MANIFEST} — "
+                f"a crashed build leaves only a .tmp directory)")
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except json.JSONDecodeError as e:
+            raise IndexStoreError(f"{path}: unreadable manifest: {e}") from e
+        store = cls(path=path, manifest=manifest)
+        store.validate()
+        return store
+
+    def validate(self) -> None:
+        m = self.manifest
+        if m.get("format_version") != FORMAT_VERSION:
+            raise IndexStoreError(
+                f"{self.path}: format_version {m.get('format_version')!r} "
+                f"!= supported {FORMAT_VERSION}")
+        for key in ("n", "dim", "dtype", "chunks"):
+            if key not in m:
+                raise IndexStoreError(f"{self.path}: manifest missing {key!r}")
+        rows = 0
+        for c in m["chunks"]:
+            fpath = os.path.join(self.path, c["file"])
+            if not os.path.isfile(fpath):
+                raise IndexStoreError(f"{self.path}: missing chunk {c['file']}")
+            arr = _read_chunk(fpath, m["dtype"])
+            if arr.ndim != 2 or arr.shape != (c["rows"], m["dim"]):
+                raise IndexStoreError(
+                    f"{self.path}: chunk {c['file']} has shape "
+                    f"{tuple(arr.shape)}, manifest says ({c['rows']}, {m['dim']})")
+            rows += c["rows"]
+        if rows != m["n"]:
+            raise IndexStoreError(
+                f"{self.path}: chunk rows sum to {rows}, manifest n={m['n']}")
+        for key in ("pca_file", "scale_file"):
+            f = m.get(key)
+            if f is not None and not os.path.isfile(os.path.join(self.path, f)):
+                raise IndexStoreError(f"{self.path}: missing {key} blob {f}")
+
+    # -- shape -------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.manifest["n"])
+
+    @property
+    def dim(self) -> int:
+        return int(self.manifest["dim"])
+
+    @property
+    def dtype(self) -> np.dtype:
+        return _as_numpy_dtype(self.manifest["dtype"])
+
+    @property
+    def meta(self) -> dict:
+        return self.manifest.get("meta", {})
+
+    @property
+    def nbytes(self) -> int:
+        b = self.n * self.dim * self.dtype.itemsize
+        if self.manifest.get("scale_file"):
+            b += self.dim * 4
+        return b
+
+    # -- reads (host-streamed) --------------------------------------------
+    def iter_chunks(self, mmap: bool = True) -> Iterator[np.ndarray]:
+        """Yield row chunks in order, memory-mapped by default."""
+        for c in self.manifest["chunks"]:
+            yield _read_chunk(os.path.join(self.path, c["file"]),
+                              self.manifest["dtype"], mmap=mmap)
+
+    def read_rows(self, start: int, stop: int) -> np.ndarray:
+        """Materialise rows [start, stop) — host memory O(stop - start).
+
+        Chunks outside the range are never touched (mmap slicing), which is
+        what lets a sharded load pull one device's rows at a time.
+        """
+        if not 0 <= start <= stop <= self.n:
+            raise ValueError(f"row range [{start}, {stop}) outside [0, {self.n})")
+        out = np.empty((stop - start, self.dim), self.dtype)
+        pos = 0          # global row index at the current chunk's head
+        filled = 0
+        for c in self.manifest["chunks"]:
+            rows = c["rows"]
+            lo, hi = max(start, pos), min(stop, pos + rows)
+            if lo < hi:
+                chunk = _read_chunk(os.path.join(self.path, c["file"]),
+                                    self.manifest["dtype"])
+                out[filled:filled + (hi - lo)] = chunk[lo - pos:hi - pos]
+                filled += hi - lo
+            pos += rows
+            if pos >= stop:
+                break
+        return out
+
+    def scale(self) -> np.ndarray | None:
+        f = self.manifest.get("scale_file")
+        if f is None:
+            return None
+        return np.load(os.path.join(self.path, f))
+
+    def load_pca(self):
+        """PCAState persisted at build time (None file -> error)."""
+        f = self.manifest.get("pca_file")
+        if f is None:
+            raise IndexStoreError(f"{self.path}: store has no PCA state")
+        from repro.core import pca as _pca
+        return _pca.load_pca(os.path.join(self.path, f))
+
+    def load_pruner(self):
+        """Rebuild the StaticPruner this store was pruned with."""
+        from repro.core.pruning import StaticPruner
+        state = self.load_pca()
+        m = self.meta.get("kept_dims", self.dim)
+        pruner = StaticPruner(m=int(m), center=state.centered)
+        pruner.state = state
+        return pruner
+
+    # -- append (incremental growth) --------------------------------------
+    def append(self, block: np.ndarray) -> None:
+        """Durably append a row chunk to a committed store.
+
+        Protocol: chunk blob fsynced first, then the manifest atomically
+        replaced (``os.replace``) and the directory fsynced — the manifest
+        swap is the commit point.
+        """
+        block = np.asarray(block)
+        if block.ndim != 2 or block.shape[1] != self.dim:
+            raise ValueError(f"append expects (rows, {self.dim}), got "
+                             f"{tuple(block.shape)}")
+        if block.dtype.name != self.manifest["dtype"]:
+            raise ValueError(f"append dtype {block.dtype.name} != store dtype "
+                             f"{self.manifest['dtype']}")
+        fname = f"vectors_{len(self.manifest['chunks']):06d}.npy"
+        _write_chunk(os.path.join(self.path, fname), block)
+        manifest = dict(self.manifest)
+        manifest["chunks"] = self.manifest["chunks"] + [
+            {"file": fname, "rows": int(block.shape[0])}]
+        manifest["n"] = self.n + int(block.shape[0])
+        tmp_manifest = os.path.join(self.path, MANIFEST + ".tmp")
+        write_json_fsync(tmp_manifest, manifest)
+        os.replace(tmp_manifest, os.path.join(self.path, MANIFEST))
+        fsync_dir(self.path)
+        self.manifest = manifest

@@ -20,11 +20,20 @@ selects the fused score-and-select kernel for the (per-shard) scan.
 merges per-shard candidates in two all-gather stages (k·(a+b) candidates
 per device instead of k·a·b).
 
+``--save-index DIR`` persists the offline artifact (PCA state + pruned
+vectors + int8 scale) through ``repro.core.store``; ``--load-index DIR``
+serves from it — no PCA refit, no index rebuild, and the index is
+host-streamed onto the device(s) (per-shard when ``--sharded``). The
+cold-start time (open store -> first answered query) is printed.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 --dim 256 \
       --cutoff 0.5 --queries 256 --batch 32
   PYTHONPATH=src python -m repro.launch.serve --sharded --host-devices 4 \
       --backend pallas --merge hierarchical
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 \
+      --quantize-int8 --save-index /tmp/idx
+  PYTHONPATH=src python -m repro.launch.serve --load-index /tmp/idx --sharded
 """
 from __future__ import annotations
 
@@ -37,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
+from repro.core import DenseIndex, IndexStore, ShardedDenseIndex, StaticPruner
+from repro.core.store import save_index
 from repro.data.synthetic import make_dataset
 from repro.util import force_host_device_count
 
@@ -188,37 +198,93 @@ def main() -> None:
                     help="sharded candidate merge: one all-gather over "
                          "every device, or two stages over a factored mesh")
     ap.add_argument("--quantize-int8", action="store_true")
+    ap.add_argument("--save-index", default=None, metavar="DIR",
+                    help="persist the built artifact (PCA state + pruned "
+                         "vectors + int8 scale) to DIR for later "
+                         "--load-index restarts")
+    ap.add_argument("--load-index", default=None, metavar="DIR",
+                    help="serve from an on-disk artifact: skips the PCA "
+                         "refit and index rebuild entirely (the paper's "
+                         "offline/online split, made real)")
     args = ap.parse_args()
+    if args.save_index and args.load_index:
+        ap.error("--save-index and --load-index are mutually exclusive")
 
     force_host_device_count(args.host_devices or (4 if args.sharded else 0))
 
-    print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
-    ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,
-                      query_sets=("dl19",))
-    D = jnp.asarray(ds.docs)
-    Q = np.asarray(ds.queries["dl19"])
-    Q = np.tile(Q, (max(1, args.queries // len(Q) + 1), 1))[:args.queries]
+    if args.load_index:
+        # peek at the artifact for the query dimensionality, synthesise the
+        # query stream, then time the restart proper: open+validate, load,
+        # first answered query — the same span as the perf sweep's
+        # cold_start row (the peek costs one extra validate, ~ms)
+        src_d = int(IndexStore.open(args.load_index).meta.get("source_dim",
+                                                             args.dim))
+        if src_d != args.dim:
+            print(f"[serve] store was fit at d={src_d}; overriding --dim")
+            args.dim = src_d
+        # a tiny corpus is enough to synthesise the query stream — the
+        # served docs come from the artifact, not from here
+        ds = make_dataset("tasb", n_docs=256, d=args.dim,
+                          query_sets=("dl19",))
+        Q = np.asarray(ds.queries["dl19"])
+        Q = np.tile(Q, (max(1, args.queries // len(Q) + 1), 1))[:args.queries]
 
-    pruner = StaticPruner(cutoff=args.cutoff).fit(D)
-    pruned = pruner.prune_index(D)
-    if args.sharded:
-        ndev = jax.device_count()
-        mesh = _serve_mesh(ndev, args.merge)
-        index = ShardedDenseIndex.build(pruned, mesh,
-                                        quantize_int8=args.quantize_int8,
-                                        backend=args.backend,
-                                        merge=args.merge)
-        print(f"[serve] sharded index: {index.n} x {index.dim} over "
-              f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
-              f"({index.nbytes/2**20:.1f} MiB, backend={args.backend}, "
-              f"merge={args.merge})")
+        t_cold = time.perf_counter()
+        store = IndexStore.open(args.load_index)
+        pruner = store.load_pruner()
+        if args.sharded:
+            mesh = _serve_mesh(jax.device_count(), args.merge)
+            index = ShardedDenseIndex.load(store, mesh,
+                                           backend=args.backend,
+                                           merge=args.merge)
+            print(f"[serve] loaded sharded index: {index.n} x {index.dim} "
+                  f"over mesh "
+                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "
+                  f"({index.nbytes/2**20:.1f} MiB, backend={args.backend}, "
+                  f"merge={args.merge})")
+        else:
+            index = DenseIndex.load(store, backend=args.backend)
+            print(f"[serve] loaded index: {index.n} x {index.dim} "
+                  f"({index.nbytes/2**20:.1f} MiB, "
+                  f"dtype={index.vectors.dtype})")
+        server = RetrievalServer(index, pruner, k=args.k,
+                                 max_batch=args.batch)
+        server.query(Q[0])   # first answered query closes the cold start
+        print(f"[serve] cold start (open store -> first query): "
+              f"{(time.perf_counter() - t_cold)*1e3:.1f}ms")
+        server.batch_log.clear()
     else:
-        index = DenseIndex.build(pruned, quantize_int8=args.quantize_int8,
-                                 backend=args.backend)
-        print(f"[serve] pruned index: {index.n} x {index.dim} "
-              f"({index.nbytes/2**20:.1f} MiB)")
+        print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
+        ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,
+                          query_sets=("dl19",))
+        D = jnp.asarray(ds.docs)
+        Q = np.asarray(ds.queries["dl19"])
+        Q = np.tile(Q, (max(1, args.queries // len(Q) + 1), 1))[:args.queries]
 
-    server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch)
+        pruner = StaticPruner(cutoff=args.cutoff).fit(D)
+        pruned = pruner.prune_index(D)
+        if args.sharded:
+            ndev = jax.device_count()
+            mesh = _serve_mesh(ndev, args.merge)
+            index = ShardedDenseIndex.build(pruned, mesh,
+                                            quantize_int8=args.quantize_int8,
+                                            backend=args.backend,
+                                            merge=args.merge)
+            print(f"[serve] sharded index: {index.n} x {index.dim} over "
+                  f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+                  f"({index.nbytes/2**20:.1f} MiB, backend={args.backend}, "
+                  f"merge={args.merge})")
+        else:
+            index = DenseIndex.build(pruned, quantize_int8=args.quantize_int8,
+                                     backend=args.backend)
+            print(f"[serve] pruned index: {index.n} x {index.dim} "
+                  f"({index.nbytes/2**20:.1f} MiB)")
+        if args.save_index:
+            st = save_index(args.save_index, index, pruner=pruner)
+            print(f"[serve] saved artifact: {args.save_index} "
+                  f"({st.nbytes/2**20:.1f} MiB on disk, n={st.n})")
+
+        server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch)
     wall, lat = _drive(server, Q)
     stats = server.worker_stats()
     server.close()
@@ -231,7 +297,10 @@ def main() -> None:
           f"{stats['mean_batch']:.1f}/{args.batch} "
           f"({stats['occupancy']*100:.0f}% occupancy)")
 
-    if args.compare_full:
+    if args.compare_full and args.load_index:
+        print("[serve] --compare-full needs the raw corpus; skipped under "
+              "--load-index")
+    elif args.compare_full:
         full = DenseIndex.build(D)
         server2 = RetrievalServer(full, None, k=args.k, max_batch=args.batch)
         wall_full, _ = _drive(server2, Q)   # identical query order/batching

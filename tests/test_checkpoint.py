@@ -28,6 +28,27 @@ def test_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_save_fsyncs_every_blob_and_parent_dir(tmp_path, monkeypatch):
+    """The commit protocol's durability claim: every .npy blob is fsynced
+    before the manifest, and the parent directory is fsynced after the
+    rename — not just the manifest (the old behaviour)."""
+    import repro.checkpoint.manager as mgr
+    synced_files: list[str] = []
+    synced_dirs: list[str] = []
+    real_file, real_dir = mgr.fsync_file, mgr.fsync_dir
+    monkeypatch.setattr(mgr, "fsync_file",
+                        lambda p: (synced_files.append(p), real_file(p)))
+    monkeypatch.setattr(mgr, "fsync_dir",
+                        lambda p: (synced_dirs.append(p), real_dir(p)))
+    t = _tree()
+    path = str(tmp_path / "ck")
+    mgr.save_pytree(path, t)
+    n_leaves = len(jax.tree.leaves(t))
+    assert len([f for f in synced_files if f.endswith(".npy")]) == n_leaves
+    # parent of the committed dir fsynced after the rename
+    assert str(tmp_path) in [os.path.normpath(d) for d in synced_dirs]
+
+
 def test_atomic_no_partial_dirs(tmp_path):
     t = _tree()
     path = str(tmp_path / "ck")

@@ -44,6 +44,21 @@ def test_pallas_backend_matches_jnp():
         assert set(np.asarray(a[1])[x].tolist()) == set(np.asarray(b[1])[x].tolist())
 
 
+def test_pallas_backend_honours_block():
+    """``block`` used to be silently dropped on the pallas backend — a
+    non-default block must reach the kernel and preserve exact results."""
+    D, Q = _data(700, 32)
+    idx = DenseIndex.build(D, backend="pallas")
+    s_def, i_def = idx.search(Q, k=10)
+    s_blk, i_blk = idx.search(Q, k=10, block=256)   # non-default block_n
+    assert (np.asarray(i_def) == np.asarray(i_blk)).all()
+    np.testing.assert_allclose(np.asarray(s_def), np.asarray(s_blk),
+                               rtol=1e-5, atol=1e-5)
+    # and both match the jnp oracle at another non-default block
+    _, want = DenseIndex.build(D).search(Q, k=10, block=130)
+    assert (np.asarray(i_blk) == np.asarray(want)).all()
+
+
 def test_int8_index_recall():
     D, Q = _data(3000, 64)
     full = DenseIndex.build(D)

@@ -3,6 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.maintenance import IndexUpdater, captured_energy
+from repro.core.pruning import StaticPruner
 from repro.data.synthetic import make_corpus, make_ood_corpus
 
 
@@ -53,6 +54,71 @@ def test_refit_restores_energy():
     after = up.drift_score(shifted)
     assert after > before
     assert abs(up.drift_score(shifted) - 1.0) < 0.05
+
+
+def test_drift_score_without_fit_energy():
+    """Directly-constructed updater (dataclass default fit_energy=None)
+    used to raise TypeError in drift_score; the reference energy is now
+    derived lazily from the eigenvalues — and matches the corpus-measured
+    one on the fit corpus itself."""
+    D = _corpus()
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    up = IndexUpdater(pruner=pruner, index=pruner.build_index(D))
+    assert up.fit_energy is None
+    score = up.drift_score(D[:500])        # must not raise
+    assert 0.5 < score < 1.5
+    # lazy reference == measured reference (uncentered Gram identity)
+    measured = captured_energy(D, pruner)
+    assert abs(up._reference_energy() - measured) < 2e-3
+
+
+def test_drift_reference_centered_fit():
+    """The lazy reference must also be exact for center=True fits, where
+    captured_energy's uncentered ratio picks up the mean's energy."""
+    D = _corpus() + 3.0                    # nonzero mean: centering matters
+    pruner = StaticPruner(cutoff=0.5, center=True).fit(D)
+    up = IndexUpdater(pruner=pruner, index=pruner.build_index(D))
+    measured = captured_energy(D, pruner)
+    assert abs(up._reference_energy() - measured) < 2e-3
+    assert abs(up.drift_score(D) - 1.0) < 5e-3
+
+
+def test_add_documents_clip_fraction_ood():
+    """Regression: an out-of-distribution append under the frozen int8
+    scale used to clip silently. The clip fraction must be tracked,
+    exposed, and trip needs_refit even when drift alone would not."""
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True)
+    # in-distribution append: essentially no clipping
+    in_dom = _corpus(seed=0, n=200, domain_seed=4)[:100]
+    frac_in = up.add_documents(in_dom)
+    assert frac_in < 0.01
+    assert up.clip_fraction < 0.01
+    assert not up.needs_refit(in_dom)
+    # OOD magnitudes: same subspace (drift blind), 50x the dynamic range
+    frac_ood = up.add_documents(50.0 * in_dom)
+    assert frac_ood > 0.5
+    assert up.clip_fraction > 0.01
+    # drift_score can't see it (same subspace, energy ratio unchanged)...
+    assert up.drift_score(50.0 * in_dom) > 0.9
+    # ...but the clip policy trips the refit
+    assert up.needs_refit(50.0 * in_dom)
+
+
+def test_clip_fraction_zero_on_float_index():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5)
+    frac = up.add_documents(1e6 * _corpus(seed=0, n=120, domain_seed=5)[:40])
+    assert frac == 0.0 and up.clip_fraction == 0.0
+
+
+def test_refit_resets_clip_telemetry():
+    D = _corpus()
+    up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True)
+    up.add_documents(50.0 * _corpus(seed=0, n=120, domain_seed=6)[:40])
+    assert up.clip_fraction > 0.0
+    up.refit(D)
+    assert up.clip_fraction == 0.0
 
 
 def test_captured_energy_bounds():
