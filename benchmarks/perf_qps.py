@@ -7,6 +7,9 @@
     over PR (written by ``benchmarks.run``)
   * select-path A/B: the two-stage + block-skip ``_scan_topk`` against the
     legacy concat-and-full-top_k select on the same corpus
+  * serve_pipeline: sync vs pipelined RetrievalServer under open-loop
+    (Poisson) load — worker qps, p50/p95/p99 latency, occupancy, and a
+    bit-identity check between the two workers per config
   * beyond-paper: int8 index on top of PCA (bytes /4, recall preserved)
 
 Emits ``name,us_per_call,derived`` CSV rows like every other bench and
@@ -17,6 +20,7 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
+import threading
 import time
 from functools import partial
 
@@ -37,6 +41,10 @@ ITERS = 3
 # interpret-mode Pallas pays a huge per-op interpreter tax off-TPU; cap its
 # corpus so the sweep stays tractable (the config records its own n)
 PALLAS_MAX_DOCS = 20_000
+# serve_pipeline section: open-loop queries per drive, in-flight window
+N_SERVE = 192
+SERVE_DEPTH = 3
+SERVE_BATCH = 32
 
 
 def _bench(fn, *args, iters: int = ITERS) -> float:
@@ -155,6 +163,186 @@ def _sweep(D, Q, ids_ref, emit) -> dict:
     return out
 
 
+class _LegacySyncServer:
+    """The pre-PR synchronous serving loop, faithfully reproduced for the
+    sync row of the serve_pipeline bench (the ``_scan_topk_concat`` of the
+    serving layer).
+
+    One worker thread that (a) sleep-polls the request queue while
+    assembling a batch, (b) dispatches projection (``transform_queries``)
+    and search as separate computations, (c) blocks on ``np.asarray`` for
+    the full D2H round-trip before assembling the next batch, and (d)
+    dispatches whatever batch size arrived — so under ragged open-loop
+    load every novel size jit-compiles a fresh full-index scan mid-serve.
+    The pipelined server exists to delete exactly these four behaviours.
+    """
+
+    def __init__(self, index, pruner, k=10, max_batch=32):
+        import queue as _q
+        self.index, self.pruner, self.k = index, pruner, k
+        self.max_batch = max_batch
+        self.q: "queue.Queue" = _q.Queue()
+        self.batch_log: list = []   # (size, t0, t1) — same shape as the new log
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    def _next_batch(self):
+        import queue as _q
+        try:
+            first = self.q.get(timeout=0.5)
+        except _q.Empty:
+            return None
+        items = [first]
+        t0 = time.time()
+        while len(items) < self.max_batch and (time.time() - t0) < 0.002:
+            try:
+                items.append(self.q.get_nowait())
+            except _q.Empty:
+                time.sleep(0.0002)
+        return np.stack([x[0] for x in items]), [x[1] for x in items]
+
+    def _loop(self):
+        while not self._stop.is_set():
+            item = self._next_batch()
+            if item is None:
+                continue
+            vecs, replies = item
+            t0 = time.perf_counter()
+            q = jnp.asarray(vecs)
+            if self.pruner is not None:
+                q = self.pruner.transform_queries(q)      # separate dispatch
+            scores, ids = self.index.search(q, k=self.k)  # second dispatch
+            scores = np.asarray(scores)                   # full D2H block
+            ids = np.asarray(ids)
+            self.batch_log.append((len(replies), t0, time.perf_counter()))
+            for i, r in enumerate(replies):
+                r.put((scores[i], ids[i]))
+
+    def submit(self, qvec):
+        import queue as _q
+        reply: "queue.Queue" = _q.Queue(maxsize=1)
+        self.q.put((qvec, reply))
+        return reply
+
+    def query(self, qvec, timeout: float = 10.0):
+        return self.submit(qvec).get(timeout=timeout)
+
+    def worker_stats(self):
+        from repro.launch.serve import RetrievalServer
+        return RetrievalServer.worker_stats(self)
+
+    def close(self):
+        self._stop.set()
+        self._worker.join(timeout=60.0)
+
+
+def _serve_mode_row(res: dict, stats: dict) -> dict:
+    return dict(qps=res["achieved_qps"], p50_ms=res["p50_ms"],
+                p95_ms=res["p95_ms"], p99_ms=res["p99_ms"],
+                worker_qps=stats["worker_qps"],
+                service_qps=stats["service_qps"],
+                occupancy=stats["occupancy"], batches=stats["batches"])
+
+
+def _serve_pipeline(Dh, pruner, Q_raw, emit) -> dict:
+    """Sync vs pipelined serving under open-loop (Poisson) load.
+
+    Per config {dense, sharded} x {f32, int8}, three servers run the same
+    Poisson arrival tape at 1.5x the fused batched capacity:
+
+      * ``sync``       — the pre-PR synchronous loop (``_LegacySyncServer``:
+                         separate projection dispatch, ragged batch shapes
+                         that recompile mid-serve, D2H-blocking before the
+                         next batch is even assembled);
+      * ``sync_fused`` — the new worker at pipeline_depth=1: fused
+                         ``search_projected`` + fixed-shape padded batches,
+                         but still one batch in flight (attribution row —
+                         how much of the win is fusion vs pipelining);
+      * ``pipelined``  — the new stager/completer worker at depth 3.
+
+    Every query's (scores, ids) is collected from all three; the two
+    new-architecture workers (same compiled fn, same padded shape) are
+    compared bit-exactly — the pipeline must change throughput, never
+    results. The legacy worker's ids agreement is reported alongside (its
+    ragged batch shapes hit different matmul kernels, ~1e-7 score jitter).
+    """
+    from repro.launch.serve import RetrievalServer, _drive_open, _serve_mesh
+    ndev = jax.device_count()
+    layouts = [("dense", None)]
+    if ndev > 1:
+        layouts.append(("sharded", _serve_mesh(ndev, "flat")))
+    else:
+        emit("# serve_pipeline: single device — sharded configs skipped")
+    Q = np.asarray(Q_raw)
+    Qs = np.tile(Q, (N_SERVE // len(Q) + 1, 1))[:N_SERVE]
+    W, mean = pruner.projection()
+    configs = {}
+    for layout, mesh in layouts:
+        for dtype in ("f32", "int8"):
+            quant = dtype == "int8"
+            if mesh is None:
+                idx = DenseIndex.build(Dh, quantize_int8=quant)
+            else:
+                idx = ShardedDenseIndex.build(Dh, mesh, quantize_int8=quant)
+            name = f"{layout}_{dtype}"
+
+            # offered rate: 1.5x the fused full-batch capacity, so every
+            # worker saturates and worker-side qps is the comparison
+            tb = _bench(lambda q: idx.search_projected(q, W, k=K, mean=mean),
+                        jnp.asarray(Qs[:SERVE_BATCH])) / 1e6
+            rate = 1.5 * SERVE_BATCH / tb
+
+            rows, outs = {}, {}
+            servers = (
+                ("sync", lambda: _LegacySyncServer(
+                    idx, pruner, k=K, max_batch=SERVE_BATCH)),
+                ("sync_fused", lambda: RetrievalServer(
+                    idx, pruner, k=K, max_batch=SERVE_BATCH,
+                    pipeline_depth=1)),
+                ("pipelined", lambda: RetrievalServer(
+                    idx, pruner, k=K, max_batch=SERVE_BATCH,
+                    pipeline_depth=SERVE_DEPTH)),
+            )
+            for mode, make in servers:
+                srv = make()
+                res = _drive_open(srv, Qs, rate=rate, collect=True)
+                stats = srv.worker_stats()
+                srv.close()
+                outs[mode] = res.pop("results")
+                rows[mode] = _serve_mode_row(res, stats)
+            # scheduling must never change results: depth-1 and depth-3 run
+            # the same compiled fn on the same padded shape, so (scores,
+            # ids) are required bit-identical. The legacy worker dispatches
+            # ragged unpadded shapes whose small-B matmul kernels round
+            # differently at ~1e-7 — its ids agreement is reported, not
+            # asserted bitwise.
+            match = all(
+                (np.asarray(a[0]) == np.asarray(b[0])).all()
+                and (np.asarray(a[1]) == np.asarray(b[1])).all()
+                for a, b in zip(outs["sync_fused"], outs["pipelined"]))
+            legacy_ids = float(np.mean([
+                (np.asarray(a[1]) == np.asarray(b[1])).all()
+                for a, b in zip(outs["sync"], outs["pipelined"])]))
+            configs[name] = dict(
+                n=int(Dh.shape[0]), dim=int(Dh.shape[1]),
+                nbytes=int(idx.nbytes), rate_qps=float(rate),
+                match=bool(match), legacy_ids_equal=legacy_ids, **rows)
+            emit(f"serve_pipeline_{name},{rows['pipelined']['p50_ms']*1e3:.0f},"
+                 f"sync={rows['sync']['worker_qps']:.1f}qps "
+                 f"fused={rows['sync_fused']['worker_qps']:.1f}qps "
+                 f"piped={rows['pipelined']['worker_qps']:.1f}qps "
+                 f"(offered {rate:.1f}) "
+                 f"p99 {rows['sync']['p99_ms']:.0f}->"
+                 f"{rows['pipelined']['p99_ms']:.0f}ms match={match}")
+    return dict(meta=dict(depth=int(SERVE_DEPTH), max_batch=int(SERVE_BATCH),
+                          n_queries=int(N_SERVE),
+                          rate_policy="1.5x fused batched capacity",
+                          sync_row="pre-PR synchronous worker "
+                                   "(_LegacySyncServer)"),
+                configs=configs)
+
+
 def run(emit=print) -> dict:
     # structured corpus (trained-encoder spectral regime) — recall under
     # pruning is meaningless on isotropic gaussians
@@ -211,6 +399,11 @@ def run(emit=print) -> dict:
     Dh = pruner.prune_index(D)
     _, ids_ref_pruned = DenseIndex.build(Dh).search(qh, k=K)
     results["sweep"] = _sweep(Dh, qh, np.asarray(ids_ref_pruned), emit)
+
+    # end-to-end serving: sync vs pipelined workers under open-loop load,
+    # raw d-dim queries through the fused search_projected hot path
+    results["serve_pipeline"] = _serve_pipeline(Dh, pruner, np.asarray(Q),
+                                                emit)
 
     # cold start: committed on-disk artifact -> first answered query — the
     # restart path ``serve.py --load-index`` takes. One-shot by nature

@@ -18,6 +18,34 @@ import time
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_PERF_PATH = REPO_ROOT / "BENCH_perf.json"
 
+# every serve_pipeline config row must carry both modes with these keys —
+# a refactor that silently drops a bench section must fail CI, not ship a
+# BENCH_perf.json that quietly stopped tracking the serving trajectory
+_SERVE_MODE_KEYS = ("qps", "p50_ms", "p95_ms", "p99_ms", "worker_qps")
+
+
+def check_perf_schema(results: dict) -> None:
+    """Validate the perf dict before it becomes ``BENCH_perf.json``."""
+    sp = results.get("serve_pipeline")
+    if not isinstance(sp, dict) or not isinstance(sp.get("configs"), dict) \
+            or not sp["configs"]:
+        raise SystemExit("BENCH_perf.json schema: missing or empty "
+                         "'serve_pipeline.configs' section")
+    for name, row in sp["configs"].items():
+        for mode in ("sync", "pipelined"):
+            if mode not in row:
+                raise SystemExit(f"serve_pipeline.{name}: missing '{mode}' row")
+            missing = [k for k in _SERVE_MODE_KEYS if k not in row[mode]]
+            if missing:
+                raise SystemExit(f"serve_pipeline.{name}.{mode}: missing "
+                                 f"keys {missing}")
+        if "match" not in row:
+            raise SystemExit(f"serve_pipeline.{name}: missing sync-vs-"
+                             f"pipelined 'match' flag")
+        if not row["match"]:
+            raise SystemExit(f"serve_pipeline.{name}: pipelined results "
+                             f"diverged from the sync path (match=False)")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -70,6 +98,7 @@ def main() -> None:
     if need("perf"):
         print("\n### Perf — name,us_per_call,derived")
         results = perf_qps.run()
+        check_perf_schema(results)
         BENCH_PERF_PATH.write_text(json.dumps(results, indent=2,
                                               sort_keys=True) + "\n")
         print(f"# wrote {BENCH_PERF_PATH}")

@@ -661,13 +661,16 @@ def _two_tower_bundle(spec_, cell, mesh, cfg, params_sds, pspec, meta):
         args = (params_sds, index_sds, sds((1,), jnp.int32))
         in_specs = (pspec, P(all_axes, None), P())
     else:
-        # PCA-pruned (optionally int8) index: q̂ = W_mᵀ(scale ⊙ q)
+        # PCA-pruned (optionally int8) index: q̂ = (q @ W_m) ⊙ scale — the
+        # same fused projection+fold the serving hot path traces
+        # (repro.core.index.project_queries, one jit with the scan)
         W_sds = sds((d_full, m), jnp.float32)
         scale_sds = sds((m,), jnp.float32)
 
         def fn(params, item_index, W_m, scale, user_ids):
+            from repro.core.index import project_queries
             u = R.user_embedding(params, user_ids)           # (1, d)
-            q = (u @ W_m) * scale[None, :]                   # O(dm) transform
+            q = project_queries(u, W_m, scale=scale)         # O(dm) transform
             return _sharded_index_topk(item_index, q, TOPK_SERVE, mesh,
                                        hierarchical=hier)
 

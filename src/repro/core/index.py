@@ -32,6 +32,43 @@ Backend = Literal["jnp", "pallas"]
 Merge = Literal["flat", "hierarchical"]
 
 
+def project_queries(q: jax.Array, W: jax.Array,
+                    scale: jax.Array | None = None,
+                    mean: jax.Array | None = None) -> jax.Array:
+    """q̂ = ((q − mean) @ W_m) ⊙ scale — the full raw-query-to-search-query
+    transform (PCA projection + int8 dequant fold), written to be traced
+    inline inside the fused ``search_projected`` jits.
+
+    Operation order deliberately mirrors the two-step path
+    (``transform_query`` then ``_dequeries``) — cast to f32, center,
+    project, then fold the scale — so for f32 raw queries (the serving
+    input) the fused dispatch is bit-identical to the separate-dispatch
+    path (pinned by tests/test_sharded_parity.py). Lower-precision raw
+    queries upcast here, whereas ``transform`` casts its result back to
+    the input dtype — feed f32 when exact parity matters.
+    """
+    q = jnp.atleast_2d(q).astype(jnp.float32)
+    if mean is not None:
+        q = q - mean[None, :]
+    q = q @ W
+    if scale is not None:
+        q = q * scale[None, :]
+    return q
+
+
+@partial(jax.jit, static_argnames=("k", "block", "backend"))
+def _dense_search_projected(D, scale, W, mean, Q, k: int,
+                            block: int | None, backend: Backend):
+    """One compiled dispatch: projection + scale fold + fused top-k scan."""
+    q = project_queries(Q, W, scale=scale, mean=mean)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        if block is None:
+            return kops.topk_score(D, q, k=k)
+        return kops.topk_score(D, q, k=k, block_n=block)
+    return _scan_topk(D, q, k, block=65536 if block is None else block)
+
+
 def _topk_merge(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Top-k of (B, C) candidate scores, returning (B, k) scores + gathered ids."""
     s, idx = jax.lax.top_k(scores, k)
@@ -225,6 +262,26 @@ class DenseIndex:
         return _scan_topk(self.vectors, q, k,
                           block=65536 if block is None else block)
 
+    def search_projected(self, queries: jax.Array, components: jax.Array,
+                         k: int = 10, *, mean: jax.Array | None = None,
+                         block: int | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+        """Fused raw-query search: one dispatch from d-dim query to top-k.
+
+        ``queries`` are raw (B, d) vectors; ``components`` is the (d, m)
+        PCA projection ``W_m`` (``StaticPruner.projection()`` /
+        ``pca.projection_operands``); ``mean`` the optional centering row.
+        Projection, the int8 scale fold, and the top-k scan all trace into
+        a single jit — no separate projection dispatch, no intermediate
+        q̂ round-trip. For f32 raw queries (the serving input) results are
+        bit-identical to ``transform_queries`` → ``search``.
+        """
+        k = min(k, self.n)
+        return _dense_search_projected(self.vectors, self.scale,
+                                       jnp.asarray(components), mean,
+                                       jnp.atleast_2d(queries), k, block,
+                                       self.backend)
+
 
 @dataclasses.dataclass
 class ShardedDenseIndex:
@@ -348,6 +405,34 @@ class ShardedDenseIndex:
         if fn is None:
             fn = self._jit_cache[key] = jax.jit(self._search_fn(k, merge))
         return fn(self.vectors, q)
+
+    def search_projected(self, queries: jax.Array, components: jax.Array,
+                         k: int = 10, *, mean: jax.Array | None = None,
+                         merge: Merge | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+        """Fused raw-query search over the sharded index (one dispatch).
+
+        The PCA projection + int8 scale fold run on the replicated query
+        inside the same jit as the shard_map'd scan+merge, so the serving
+        hot path issues exactly one compiled computation per batch. For
+        f32 raw queries, bit-identical to ``transform_queries`` →
+        ``search`` (parity-tested).
+        """
+        q = jnp.atleast_2d(queries)
+        k = min(k, self.n)
+        merge = self.merge if merge is None else merge
+        key = ("projected", q.shape[0], q.shape[1], k, merge,
+               self.scale is not None, mean is not None)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            search = self._search_fn(k, merge)
+
+            def projected(vectors, W, scale, mean_, q_):
+                return search(vectors,
+                              project_queries(q_, W, scale=scale, mean=mean_))
+
+            fn = self._jit_cache[key] = jax.jit(projected)
+        return fn(self.vectors, jnp.asarray(components), self.scale, mean, q)
 
     def _search_fn(self, k: int, merge: Merge):
         axes = tuple(self.mesh.axis_names)

@@ -216,6 +216,21 @@ def transform_query(q: jax.Array, state: PCAState, m: int | None = None) -> jax.
         (*q.shape[:-1], m if m is not None else state.d))
 
 
+def projection_operands(state: PCAState, m: int | None = None
+                        ) -> tuple[jax.Array, jax.Array | None]:
+    """``(W_m, mean-or-None)`` — the operands a fused search needs.
+
+    ``DenseIndex.search_projected`` / ``ShardedDenseIndex.search_projected``
+    trace ``transform_query`` inline (projection + int8 scale fold + top-k
+    in one jit); they take these raw arrays instead of a ``PCAState`` so
+    the hot path carries no pytree and the compiled cache keys stay flat.
+    ``mean`` is ``None`` for the paper's uncentered fit — the fused path
+    then skips the subtract entirely rather than adding zeros.
+    """
+    W = state.components if m is None else state.components[:, :m]
+    return W, (state.mean if state.centered else None)
+
+
 def inverse_transform(T: jax.Array, state: PCAState) -> jax.Array:
     """Reconstruct from an m-dim projection (lossy for m < d): T @ W_m^T."""
     m = T.shape[-1]

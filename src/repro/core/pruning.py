@@ -106,10 +106,17 @@ class StaticPruner:
 
         ``corpus_batches`` is the corpus as row blocks — either a sequence
         of arrays or a zero-argument callable returning a fresh iterator
-        (the build makes up to three passes: Gram fit if not yet fitted,
-        per-dim absmax when ``quantize_int8``, then the write pass). A
-        one-shot generator is rejected loudly rather than silently yielding
-        an empty second pass.
+        (the build makes up to two passes: Gram fit if not yet fitted,
+        then one combined project/absmax/write pass). A one-shot generator
+        is rejected loudly rather than silently yielding an empty second
+        pass.
+
+        ``quantize_int8`` no longer costs a third corpus pass: the write
+        pass projects each block once, accumulates the per-dim absmax
+        while spilling the projected f32 block to a temp file, then
+        quantises from the spill under the final corpus-wide scale — the
+        corpus itself is read exactly twice (fit + write; once when
+        already fitted). The spill is O(n·m) *disk*, not memory.
 
         Peak host memory is O(block_rows × d): each block is rotated,
         optionally quantised with the corpus-wide per-dim scale, and
@@ -117,6 +124,10 @@ class StaticPruner:
         pruned index never materialise. Returns the committed
         ``IndexStore``.
         """
+        import os
+        import shutil
+        import tempfile
+
         from repro.core.store import IndexStore
 
         def passes():
@@ -133,31 +144,50 @@ class StaticPruner:
             self.fit_streaming(passes())
         m = self.kept_dims
 
-        scale = None
-        if quantize_int8:
-            absmax = np.zeros((m,), np.float32)
-            for b in passes():
-                p = np.asarray(_pca.transform(jnp.asarray(b), self.state, m),
-                               np.float32)
-                absmax = np.maximum(absmax, np.abs(p).max(axis=0))
-            scale = np.maximum(absmax, 1e-12) / 127.0
-
         writer = IndexStore.create(path)
         with writer:
             writer.put_pca(self.state)
-            if scale is not None:
-                writer.set_scale(scale)
-            for b in passes():
-                p = np.asarray(_pca.transform(jnp.asarray(b), self.state, m),
-                               np.float32)
-                if scale is not None:
-                    blk = np.clip(np.round(p / scale[None, :]),
-                                  -127, 127).astype(np.int8)
-                elif dtype is not None:
-                    blk = np.asarray(jnp.asarray(p).astype(dtype))
-                else:
-                    blk = p
-                writer.append(blk)
+            if quantize_int8:
+                # fused absmax+write pass: project each block exactly once,
+                # track the running per-dim absmax, spill the f32 projection
+                # to disk; once the corpus-wide scale is known, quantise
+                # from the spill (no extra corpus pass, memory stays
+                # O(block) — only the spill directory grows). The spill
+                # lives NEXT TO the target store, not in the system temp
+                # dir: /tmp is often RAM-backed tmpfs, which would silently
+                # turn the O(n·m) spill back into host memory.
+                spill = tempfile.mkdtemp(
+                    prefix="idxbuild_spill_",
+                    dir=os.path.dirname(os.path.abspath(path)) or ".")
+                try:
+                    absmax = np.zeros((m,), np.float32)
+                    files = []
+                    for b in passes():
+                        p = np.asarray(
+                            _pca.transform(jnp.asarray(b), self.state, m),
+                            np.float32)
+                        absmax = np.maximum(absmax, np.abs(p).max(axis=0))
+                        f = os.path.join(spill, f"{len(files):06d}.npy")
+                        np.save(f, p)
+                        files.append(f)
+                    scale = np.maximum(absmax, 1e-12) / 127.0
+                    writer.set_scale(scale)
+                    for f in files:
+                        p = np.load(f, mmap_mode="r")
+                        writer.append(np.clip(np.round(p / scale[None, :]),
+                                              -127, 127).astype(np.int8))
+                        del p
+                        os.remove(f)
+                finally:
+                    shutil.rmtree(spill, ignore_errors=True)
+            else:
+                for b in passes():
+                    p = np.asarray(
+                        _pca.transform(jnp.asarray(b), self.state, m),
+                        np.float32)
+                    if dtype is not None:
+                        p = np.asarray(jnp.asarray(p).astype(dtype))
+                    writer.append(p)
             info = dict(kept_dims=int(m), source_dim=int(self.state.d),
                         cutoff=float(self.effective_cutoff),
                         centered=bool(self.state.centered),
@@ -170,6 +200,13 @@ class StaticPruner:
         """q̂ = W_mᵀq — the only per-query cost the method adds: O(dm)."""
         self._check_fit()
         return _pca.transform_query(q, self.state, self.kept_dims)
+
+    def projection(self) -> tuple[jax.Array, jax.Array | None]:
+        """``(W_m, mean-or-None)`` for the fused ``search_projected`` path:
+        the serving loop passes raw d-dim queries plus these operands and
+        the index applies projection + scale fold + top-k in one dispatch."""
+        self._check_fit()
+        return _pca.projection_operands(self.state, self.kept_dims)
 
     # -- persistence ------------------------------------------------------------
     def save(self, path: str) -> None:

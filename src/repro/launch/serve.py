@@ -3,9 +3,19 @@
 The paper's online path, end to end:
   1. load the offline artefacts (PCA transform W_m + pruned index D̂)
   2. batch incoming queries (micro-batching queue with a latency deadline)
-  3. q̂ = W_mᵀ q  (the only added per-query cost: O(dm))
-  4. fused score+top-k scan over the (sharded) index
-  5. return doc ids + scores
+  3. one fused dispatch: q̂ = W_mᵀ q, int8 scale fold, score+top-k scan
+     (``search_projected`` — projection never leaves the compiled graph)
+  4. return doc ids + scores
+
+The worker is a two-thread pipeline (``pipeline_depth`` >= 2, the
+default): a *stager* assembles batches and enqueues the fused search —
+JAX dispatch is asynchronous, so this returns before the device finishes —
+and a *completer* blocks only on the *oldest* in-flight batch's
+device-to-host transfer and posts replies. Up to ``pipeline_depth``
+batches are in flight, so batch N+1's assembly, H2D transfer and dispatch
+overlap batch N's compute instead of serialising behind its D2H.
+``pipeline_depth<=1`` is the old synchronous loop (same math, same
+compiled fn — kept for the sync-vs-pipelined benchmark rows).
 
 ``--compare-full`` serves the unpruned index side by side and reports the
 measured speedup vs the O(d/m) prediction.
@@ -31,6 +41,10 @@ Examples:
       --cutoff 0.5 --queries 256 --batch 32
   PYTHONPATH=src python -m repro.launch.serve --sharded --host-devices 4 \
       --backend pallas --merge hierarchical
+  PYTHONPATH=src python -m repro.launch.serve --pipeline-depth 4 \
+      --open-loop 200            # Poisson arrivals at 200 qps, p50/p95/p99
+  PYTHONPATH=src python -m repro.launch.serve --pipeline-depth 1 \
+      --open-loop 200            # same load through the synchronous loop
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 \
       --quantize-int8 --save-index /tmp/idx
   PYTHONPATH=src python -m repro.launch.serve --load-index /tmp/idx --sharded
@@ -41,6 +55,7 @@ import argparse
 import queue
 import threading
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -53,31 +68,74 @@ from repro.util import force_host_device_count
 
 
 class BatchingQueue:
-    """Micro-batching: collect up to ``max_batch`` requests or flush at the
-    latency deadline — the standard online-serving pattern."""
+    """Micro-batching: collect up to ``max_batch`` requests, flush at a
+    latency deadline — the standard online-serving pattern.
+
+    All waits park on one condition variable: the old implementation spun
+    ``get_nowait`` + 200 µs sleeps for the whole deadline window on every
+    batch and woke every 0.5 s at idle, burning CPU for nothing. An idle
+    server now costs ~zero CPU (pinned by tests/test_serve_pipeline.py).
+
+    ``next_batch(want_full=...)`` is the pipelined scheduler's hook: while
+    the predicate holds (the device is still chewing on earlier batches),
+    the collector waits for a *full* batch instead of flushing at the
+    deadline — queued requests lose no latency (the device couldn't start
+    them anyway) and the batch that is dispatched ahead carries no padding.
+    The moment the predicate flips (device idle — see ``kick()``), the
+    deadline policy resumes and a partial batch flushes immediately.
+    """
 
     def __init__(self, max_batch: int = 32, deadline_ms: float = 2.0):
-        self.q: queue.Queue = queue.Queue()
         self.max_batch = max_batch
         self.deadline = deadline_ms / 1e3
+        self._items: deque = deque()
+        self._cv = threading.Condition()
 
     def submit(self, qvec: np.ndarray) -> "queue.Queue":
         reply: queue.Queue = queue.Queue(maxsize=1)
-        self.q.put((qvec, reply))
+        with self._cv:
+            self._items.append((qvec, reply))
+            self._cv.notify_all()
         return reply
 
-    def next_batch(self) -> tuple[np.ndarray, list] | None:
-        try:
-            first = self.q.get(timeout=0.5)
-        except queue.Empty:
-            return None
-        items = [first]
-        t0 = time.time()
-        while len(items) < self.max_batch and (time.time() - t0) < self.deadline:
-            try:
-                items.append(self.q.get_nowait())
-            except queue.Empty:
-                time.sleep(0.0002)
+    def kick(self) -> None:
+        """Wake every waiter so it re-evaluates its predicate (called on
+        server close and whenever the device drains to idle)."""
+        with self._cv:
+            self._cv.notify_all()
+
+    def drain(self) -> list:
+        """Remove and return every pending (vec, reply) pair — used to
+        fail-fast outstanding requests when a worker thread dies."""
+        with self._cv:
+            items = list(self._items)
+            self._items.clear()
+        return items
+
+    def empty(self) -> bool:
+        return not self._items
+
+    def next_batch(self, timeout: float = 30.0,
+                   stop: threading.Event | None = None,
+                   want_full=None) -> tuple[np.ndarray, list] | None:
+        with self._cv:
+            ready = self._cv.wait_for(
+                lambda: self._items or (stop is not None and stop.is_set()),
+                timeout=timeout)
+            if not ready or not self._items:
+                return None
+            flush_at = time.monotonic() + self.deadline
+            while len(self._items) < self.max_batch:
+                if want_full is not None and want_full():
+                    # device busy: hold out for a full batch; a kick() or
+                    # new submit re-evaluates (1 s backstop vs lost wakeups)
+                    self._cv.wait(timeout=1.0)
+                    continue
+                rem = flush_at - time.monotonic()
+                if rem <= 0 or not self._cv.wait(timeout=rem):
+                    break
+            items = [self._items.popleft()
+                     for _ in range(min(self.max_batch, len(self._items)))]
         vecs = np.stack([x[0] for x in items])
         replies = [x[1] for x in items]
         return vecs, replies
@@ -86,64 +144,205 @@ class BatchingQueue:
 class RetrievalServer:
     """Batched query server over a DenseIndex or ShardedDenseIndex.
 
-    Both index types expose ``search(q, k) -> (scores, ids)``; the sharded
+    Both index types expose ``search``/``search_projected``; the sharded
     one fans the batch out over the mesh and merges per-shard top-k, so the
-    server loop is layout-agnostic.
+    server loop is layout-agnostic. With a pruner attached, every batch is
+    one fused dispatch (``search_projected``: projection + scale fold +
+    scan); without one it falls back to plain ``search``.
 
-    The worker loop records every executed batch (size, service seconds) so
-    achieved batch occupancy and worker-side qps — queries / time the model
-    actually ran, excluding queue idle — are reportable next to the
-    client-side numbers.
+    ``pipeline_depth`` >= 2 (default 3) runs the stager/completer pipeline
+    with that many batches in flight; <= 1 is the synchronous loop. Every
+    executed batch is logged as ``(size, t_dispatch, t_done)`` so both
+    occupancy and worker-side throughput are reportable: ``worker_qps``
+    (queries / busy-span wall time — the honest pipelined number, overlap
+    counted once) and ``service_qps`` (queries / summed per-batch service
+    time — matches the old sync metric, but double-counts overlapped
+    seconds when pipelined).
     """
 
     def __init__(self, index: DenseIndex | ShardedDenseIndex,
                  pruner: StaticPruner | None,
-                 k: int = 10, max_batch: int = 32):
+                 k: int = 10, max_batch: int = 32,
+                 pipeline_depth: int = 3):
         self.index = index
         self.pruner = pruner
         self.k = k
         self.max_batch = max_batch
+        self.pipeline_depth = max(1, pipeline_depth)
         self.batcher = BatchingQueue(max_batch=max_batch)
-        self.batch_log: list[tuple[int, float]] = []   # (size, service_s)
+        # (size, t_dispatch, t_done) per executed batch
+        self.batch_log: list[tuple[int, float, float]] = []
+        self._proj = None
+        if pruner is not None:
+            W, mean = pruner.projection()
+            self._proj = (jnp.asarray(W),
+                          None if mean is None else jnp.asarray(mean))
         self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._loop, daemon=True)
-        self._worker.start()
+        self.error: BaseException | None = None   # first worker-thread crash
+        if self.pipeline_depth >= 2:
+            # bounded in-flight window. The semaphore gates batch ASSEMBLY,
+            # not just dispatch: while every slot is busy, requests keep
+            # accumulating in the batcher, so the next batch assembles full
+            # instead of greedily draining the queue into padded fragments
+            # (which burns compute on pad rows and sinks occupancy).
+            self._slots = threading.Semaphore(self.pipeline_depth)
+            self._inflight: queue.Queue = queue.Queue()
+            self._inflight_n = 0
+            self._inflight_lock = threading.Lock()
+            self._threads = [
+                threading.Thread(target=self._guard, args=(self._stage_loop,),
+                                 daemon=True),
+                threading.Thread(target=self._guard,
+                                 args=(self._complete_loop,), daemon=True)]
+        else:
+            self._threads = [threading.Thread(target=self._guard,
+                                              args=(self._loop,), daemon=True)]
+        for t in self._threads:
+            t.start()
 
+    def _guard(self, loop):
+        """Worker-thread crashes must be loud: record the exception, stop
+        the server (so clients' reply timeouts fire instead of hanging
+        forever), and unblock the sibling thread."""
+        try:
+            loop()
+        except BaseException as e:   # noqa: BLE001 — survives for reporting
+            import traceback
+            self.error = e
+            self._stop.set()
+            self.batcher.kick()
+            if self.pipeline_depth >= 2:
+                self._inflight.put(None)   # release a blocked completer
+            # fail-fast every queued request: clients get the exception
+            # immediately instead of waiting out their reply timeout
+            for _, reply in self.batcher.drain():
+                reply.put(e)
+            traceback.print_exc()
+
+    def _dispatch(self, vecs: np.ndarray):
+        """Enqueue one batch's fused search; returns device arrays
+        immediately (JAX async dispatch) — the caller decides when to
+        block on the transfer back.
+
+        Batches are zero-padded to ``max_batch`` rows so the server only
+        ever dispatches ONE compiled shape: without this, every distinct
+        partial-batch size jit-compiles a fresh 100k-row scan mid-serve —
+        hundreds of ms of compile stampeding the worker exactly when load
+        is ragged. Pad rows cost compute but are sliced off before reply;
+        exact-search results are row-independent, so real rows are
+        bit-identical to an unpadded dispatch.
+        """
+        b = len(vecs)
+        if b < self.max_batch:
+            vecs = np.concatenate(
+                [vecs, np.zeros((self.max_batch - b, vecs.shape[1]),
+                                vecs.dtype)])
+        q = jnp.asarray(vecs)
+        if self._proj is not None:
+            W, mean = self._proj
+            return self.index.search_projected(q, W, k=self.k, mean=mean)
+        return self.index.search(q, k=self.k)
+
+    def _post(self, scores, ids, replies, t0):
+        scores = np.asarray(scores)   # blocks on this batch's D2H only
+        ids = np.asarray(ids)
+        self.batch_log.append((len(replies), t0, time.perf_counter()))
+        for i, r in enumerate(replies):
+            r.put((scores[i], ids[i]))
+
+    # -- synchronous worker (pipeline_depth <= 1) ---------------------------
     def _loop(self):
-        while not self._stop.is_set():
-            item = self.batcher.next_batch()
+        while not (self._stop.is_set() and self.batcher.empty()):
+            item = self.batcher.next_batch(stop=self._stop)
             if item is None:
                 continue
             vecs, replies = item
             t0 = time.perf_counter()
-            q = jnp.asarray(vecs)
-            if self.pruner is not None:
-                q = self.pruner.transform_queries(q)
-            scores, ids = self.index.search(q, k=self.k)
-            scores = np.asarray(scores)
-            ids = np.asarray(ids)
-            self.batch_log.append((len(replies), time.perf_counter() - t0))
-            for i, r in enumerate(replies):
-                r.put((scores[i], ids[i]))
+            scores, ids = self._dispatch(vecs)
+            self._post(scores, ids, replies, t0)
+
+    # -- pipelined worker (stager + completer) ------------------------------
+    def _busy(self) -> bool:
+        """True while earlier batches are still in flight (and we are not
+        draining): the stager should then hold out for a full batch."""
+        return self._inflight_n > 0 and not self._stop.is_set()
+
+    def _stage_loop(self):
+        while not ((self._stop.is_set() and self.batcher.empty())
+                   or self.error is not None):
+            if not self._slots.acquire(timeout=0.2):
+                continue                           # re-check stop, try again
+            item = self.batcher.next_batch(stop=self._stop,
+                                           want_full=self._busy)
+            if item is None:
+                self._slots.release()
+                continue
+            vecs, replies = item
+            t0 = time.perf_counter()
+            scores, ids = self._dispatch(vecs)     # async — does not block
+            with self._inflight_lock:
+                self._inflight_n += 1
+            self._inflight.put((scores, ids, replies, t0))
+        self._inflight.put(None)                   # drain sentinel
+
+    def _complete_loop(self):
+        while True:
+            item = self._inflight.get()
+            if item is None:
+                return
+            self._post(*item)
+            with self._inflight_lock:
+                self._inflight_n -= 1
+                idle = self._inflight_n == 0
+            self._slots.release()
+            if idle:
+                self.batcher.kick()   # device drained: flush partial batches
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, qvec: np.ndarray) -> "queue.Queue":
+        """Open-loop entry: enqueue a query, return its reply queue.
+
+        The shape is validated here, synchronously: a malformed vector must
+        fail its submitter, not poison a whole batch inside the worker.
+        """
+        qvec = np.asarray(qvec)
+        want = (self._proj[0].shape[0] if self._proj is not None
+                else self.index.dim)
+        if qvec.shape != (want,):
+            raise ValueError(f"query must have shape ({want},), "
+                             f"got {qvec.shape}")
+        return self.batcher.submit(qvec)
 
     def query(self, qvec: np.ndarray, timeout: float = 10.0):
-        return self.batcher.submit(qvec).get(timeout=timeout)
+        out = self.submit(qvec).get(timeout=timeout)
+        if isinstance(out, BaseException):
+            raise RuntimeError("server worker failed") from out
+        return out
 
     def worker_stats(self) -> dict:
-        """Achieved occupancy + worker-side qps from the executed batches."""
+        """Occupancy + worker-side throughput from the executed batches."""
         if not self.batch_log:
             return dict(batches=0, mean_batch=0.0, occupancy=0.0,
-                        worker_qps=0.0)
-        sizes = np.array([s for s, _ in self.batch_log], dtype=np.float64)
-        secs = np.array([t for _, t in self.batch_log], dtype=np.float64)
+                        worker_qps=0.0, service_qps=0.0)
+        sizes = np.array([s for s, _, _ in self.batch_log], dtype=np.float64)
+        t0s = np.array([a for _, a, _ in self.batch_log], dtype=np.float64)
+        t1s = np.array([b for _, _, b in self.batch_log], dtype=np.float64)
+        span = float(t1s.max() - t0s.min())
+        busy = float((t1s - t0s).sum())
         return dict(batches=len(self.batch_log),
                     mean_batch=float(sizes.mean()),
                     occupancy=float(sizes.mean() / self.max_batch),
-                    worker_qps=float(sizes.sum() / max(secs.sum(), 1e-9)))
+                    worker_qps=float(sizes.sum() / max(span, 1e-9)),
+                    service_qps=float(sizes.sum() / max(busy, 1e-9)))
 
     def close(self):
+        """Stop accepting work *after* draining: every already-submitted
+        request is batched, executed, and replied to before the threads
+        exit (pinned by tests/test_serve_pipeline.py)."""
         self._stop.set()
-        self._worker.join(timeout=2.0)
+        self.batcher.kick()
+        for t in self._threads:
+            t.join(timeout=60.0)
 
 
 def _serve_mesh(ndev: int, merge: str):
@@ -176,6 +375,82 @@ def _drive(server: RetrievalServer, Q: np.ndarray) -> tuple[float, np.ndarray]:
     return time.perf_counter() - t0, lat
 
 
+def _lat_summary(lat_s: np.ndarray) -> dict:
+    ms = np.asarray(lat_s) * 1e3
+    return dict(p50_ms=float(np.percentile(ms, 50)),
+                p95_ms=float(np.percentile(ms, 95)),
+                p99_ms=float(np.percentile(ms, 99)),
+                mean_ms=float(ms.mean()))
+
+
+def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
+                seed: int = 0, collect: bool = False) -> dict:
+    """Open-loop load: Poisson arrivals at ``rate`` qps, independent of
+    completions.
+
+    A closed loop (``_drive``) can never overrun the server — each query
+    waits for the last — so it measures latency at trivial concurrency. An
+    open loop submits on the arrival process a real fleet generates,
+    exposing queueing and letting the pipeline actually fill. Latency is
+    measured from each query's *scheduled* arrival (not the submit call),
+    so submitter lag counts against the server, never for it (no
+    coordinated omission). One warmup query absorbs compilation.
+
+    Returns achieved/offered qps, p50/p95/p99 latency, and — with
+    ``collect`` — the per-query (scores, ids) in submission order, used by
+    the bench's sync-vs-pipelined bit-identity check.
+    """
+    rng = np.random.default_rng(seed)
+    server.query(Q[0])
+    server.batch_log.clear()
+    n = len(Q)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    lat = np.empty(n)
+    results: list = [None] * n if collect else None
+    handoff: queue.Queue = queue.Queue()
+    done = threading.Event()
+    errors: list = []
+
+    def collector():
+        # per-reply timeout: a dead worker thread must fail this drive
+        # loudly (CI would otherwise hang to its job timeout), not wedge it
+        try:
+            for _ in range(n):
+                i, reply, t_arr = handoff.get()
+                out = reply.get(timeout=120.0)
+                if isinstance(out, BaseException):
+                    raise out
+                lat[i] = time.perf_counter() - t_arr
+                if collect:
+                    results[i] = out
+        except BaseException as e:   # noqa: BLE001 — must reach the driver
+            errors.append(e)
+        finally:
+            done.set()
+
+    th = threading.Thread(target=collector, daemon=True)
+    th.start()
+    t_start = time.perf_counter()
+    t_next = t_start
+    for i in range(n):
+        t_next += gaps[i]
+        delay = t_next - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        handoff.put((i, server.submit(Q[i]), t_next))
+    done.wait()
+    if errors:
+        raise RuntimeError(
+            "open-loop drive failed: a reply never arrived (worker thread "
+            "dead?)") from errors[0]
+    wall = time.perf_counter() - t_start
+    out = dict(offered_qps=float(rate), achieved_qps=float(n / wall),
+               wall_s=float(wall), n=int(n), **_lat_summary(lat))
+    if collect:
+        out["results"] = results
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-docs", type=int, default=50000)
@@ -184,6 +459,13 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--pipeline-depth", type=int, default=3,
+                    help="max batches in flight (stager/completer overlap); "
+                         "<=1 runs the legacy synchronous worker loop")
+    ap.add_argument("--open-loop", type=float, default=0.0, metavar="QPS",
+                    help="additionally drive Poisson arrivals at QPS "
+                         "(open loop: submissions never wait on replies) "
+                         "and report p50/p95/p99 under that load")
     ap.add_argument("--compare-full", action="store_true")
     ap.add_argument("--sharded", action="store_true",
                     help="row-shard the index over a mesh of every device")
@@ -248,7 +530,8 @@ def main() -> None:
                   f"({index.nbytes/2**20:.1f} MiB, "
                   f"dtype={index.vectors.dtype})")
         server = RetrievalServer(index, pruner, k=args.k,
-                                 max_batch=args.batch)
+                                 max_batch=args.batch,
+                                 pipeline_depth=args.pipeline_depth)
         server.query(Q[0])   # first answered query closes the cold start
         print(f"[serve] cold start (open store -> first query): "
               f"{(time.perf_counter() - t_cold)*1e3:.1f}ms")
@@ -284,25 +567,39 @@ def main() -> None:
             print(f"[serve] saved artifact: {args.save_index} "
                   f"({st.nbytes/2**20:.1f} MiB on disk, n={st.n})")
 
-        server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch)
+        server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch,
+                                 pipeline_depth=args.pipeline_depth)
     wall, lat = _drive(server, Q)
     stats = server.worker_stats()
-    server.close()
     lat_ms = lat * 1e3
-    print(f"[serve] pruned: {args.queries / wall:.1f} qps  "
+    mode = ("pipelined" if args.pipeline_depth >= 2 else "sync")
+    print(f"[serve] pruned ({mode}): {args.queries / wall:.1f} qps  "
           f"p50={np.percentile(lat_ms, 50):.2f}ms "
           f"p99={np.percentile(lat_ms, 99):.2f}ms")
-    print(f"[serve] worker: {stats['worker_qps']:.1f} qps over "
+    print(f"[serve] worker: {stats['worker_qps']:.1f} qps span "
+          f"({stats['service_qps']:.1f} qps service) over "
           f"{stats['batches']} batches, mean batch "
           f"{stats['mean_batch']:.1f}/{args.batch} "
           f"({stats['occupancy']*100:.0f}% occupancy)")
+
+    if args.open_loop > 0:
+        res = _drive_open(server, Q, rate=args.open_loop)
+        ostats = server.worker_stats()
+        print(f"[serve] open-loop @ {args.open_loop:.0f} qps offered: "
+              f"{res['achieved_qps']:.1f} qps achieved  "
+              f"p50={res['p50_ms']:.2f}ms p95={res['p95_ms']:.2f}ms "
+              f"p99={res['p99_ms']:.2f}ms  "
+              f"worker={ostats['worker_qps']:.1f} qps "
+              f"({ostats['occupancy']*100:.0f}% occupancy)")
+    server.close()
 
     if args.compare_full and args.load_index:
         print("[serve] --compare-full needs the raw corpus; skipped under "
               "--load-index")
     elif args.compare_full:
         full = DenseIndex.build(D)
-        server2 = RetrievalServer(full, None, k=args.k, max_batch=args.batch)
+        server2 = RetrievalServer(full, None, k=args.k, max_batch=args.batch,
+                                  pipeline_depth=args.pipeline_depth)
         wall_full, _ = _drive(server2, Q)   # identical query order/batching
         server2.close()
         print(f"[serve] full:   {args.queries / wall_full:.1f} qps  "

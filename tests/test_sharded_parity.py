@@ -204,6 +204,98 @@ def test_static_pruner_fit_distributed_end_to_end():
     assert (np.asarray(ids) == np.asarray(wids)).all()
 
 
+# ---------------------------------------------------------------------------
+# fused projection parity: search_projected(raw q) must be bit-identical to
+# transform_queries(q) -> search on every layout x backend x dtype
+# ---------------------------------------------------------------------------
+
+
+def _fused_vs_two_step(idx, pruner, Qraw, k=10):
+    W, mean = pruner.projection()
+    qh = pruner.transform_queries(Qraw)
+    s0, i0 = idx.search(qh, k=k)
+    s1, i1 = idx.search_projected(Qraw, W, k=k, mean=mean)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    assert (np.asarray(s0) == np.asarray(s1)).all()   # bit-identical
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_search_projected_matches_two_step_dense(backend, dtype):
+    D, Q = _data(700, 32)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    if dtype == "int8":
+        idx = DenseIndex.build(Dh, quantize_int8=True, backend=backend)
+    else:
+        idx = DenseIndex.build(
+            Dh.astype(jnp.bfloat16) if dtype == "bf16" else Dh,
+            backend=backend)
+    _fused_vs_two_step(idx, pruner, Q)
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("ndev", [1, 4])
+def test_search_projected_matches_two_step_sharded(ndev, backend, dtype):
+    """Uneven shard rows on purpose: 1003 % 4 != 0, so the fused path must
+    agree under device padding too."""
+    mesh = _mesh(ndev)
+    D, Q = _data(1003, 32)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    if dtype == "int8":
+        idx = ShardedDenseIndex.build(Dh, mesh, quantize_int8=True,
+                                      backend=backend)
+    else:
+        idx = ShardedDenseIndex.build(
+            Dh.astype(jnp.bfloat16) if dtype == "bf16" else Dh,
+            mesh, backend=backend)
+    _fused_vs_two_step(idx, pruner, Q)
+
+
+def test_search_projected_centered_pruner_dense_and_sharded():
+    """center=True exercises the mean-subtraction branch of the fused jit."""
+    mesh = _mesh(4)
+    D, Q = _data(900, 24)
+    pruner = StaticPruner(cutoff=0.5, center=True).fit(D)
+    Dh = pruner.prune_index(D)
+    _fused_vs_two_step(DenseIndex.build(Dh), pruner, Q)
+    _fused_vs_two_step(ShardedDenseIndex.build(Dh, mesh), pruner, Q)
+
+
+def test_search_projected_hierarchical_2d_mesh_int8():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    mesh = jax.make_mesh((2, 2), ("row", "col"))
+    D, Q = _data(1001, 16)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    idx = ShardedDenseIndex.build(Dh, mesh, quantize_int8=True,
+                                  merge="hierarchical")
+    _fused_vs_two_step(idx, pruner, Q, k=7)
+
+
+def test_search_projected_is_single_dispatch_dense():
+    """The fused path must stay ONE compiled computation: the d->m
+    projection matmul traces into the same jit as the top-k scan instead
+    of running as its own dispatch on the hot path."""
+    import repro.core.index as index_mod
+    D, Q = _data(600, 32)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    W, _ = pruner.projection()
+    jaxpr = jax.make_jaxpr(
+        lambda d, w, q: index_mod._dense_search_projected(
+            d, None, w, None, q, 10, None, "jnp"))(Dh, W, Q)
+    prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
+    # the (B, d) @ (d, m) projection is a dot_general at this level; the
+    # scan carries the streamed top-k — both inside one traced computation
+    assert "dot_general" in prims or "pjit" in prims
+    flat = jaxpr.pretty_print(use_color=False)
+    assert "dot_general" in flat and ("scan" in flat or "top_k" in flat)
+
+
 def test_compat_abstract_mesh_roundtrip():
     am = compat.abstract_mesh((2, 4), ("data", "model"))
     assert tuple(am.axis_names) == ("data", "model")

@@ -218,6 +218,57 @@ def test_streaming_build_peak_memory_is_o_block(tmp_path):
         f"peak host memory {peak} bytes is not O(block) vs corpus {full_bytes}"
 
 
+def test_streaming_int8_build_two_corpus_passes(tmp_path):
+    """The int8 build's absmax piggybacks on the write pass (projected
+    blocks spill to disk while the scale accumulates), so the corpus is
+    read exactly twice: once for the Gram fit, once to project+write —
+    down from three passes. Counted via generator restarts."""
+    D = _corpus(900, 48)
+    blocks = [np.asarray(D[i:i + 300]) for i in range(0, 900, 300)]
+    calls = {"n": 0}
+
+    def gen():
+        calls["n"] += 1
+        yield from blocks
+
+    st = StaticPruner(cutoff=0.5).build_index_to(
+        str(tmp_path / "st"), gen, quantize_int8=True)
+    assert calls["n"] == 2, f"expected 2 corpus passes, got {calls['n']}"
+    assert st.n == 900 and st.dtype == np.int8
+
+    # an already-fitted pruner needs only the write pass
+    pre = StaticPruner(cutoff=0.5)
+    pre.fit_streaming(blocks)
+    calls["n"] = 0
+    st2 = pre.build_index_to(str(tmp_path / "st2"), gen, quantize_int8=True)
+    assert calls["n"] == 1
+    # identical artifact either way: same scale, same quantised rows
+    np.testing.assert_array_equal(st.scale(), st2.scale())
+    np.testing.assert_array_equal(st.read_rows(0, 900), st2.read_rows(0, 900))
+
+
+def test_streaming_int8_build_peak_memory_is_o_block(tmp_path):
+    """The absmax fusion spills projected blocks to disk — host peak must
+    stay O(block) for the int8 path too, not grow to the corpus."""
+    n, d, rows = 30000, 128, 1000
+    full_bytes = n * d * 4
+
+    def gen():
+        rng = np.random.default_rng(0)    # fresh per pass: identical blocks
+        for _ in range(n // rows):
+            yield rng.standard_normal((rows, d)).astype(np.float32)
+
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    st = StaticPruner(cutoff=0.5).build_index_to(str(tmp_path / "st"), gen,
+                                                 quantize_int8=True)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert st.n == n and st.dtype == np.int8
+    assert peak < full_bytes / 4, \
+        f"peak host memory {peak} bytes is not O(block) vs corpus {full_bytes}"
+
+
 def test_streaming_build_rejects_one_shot_generator(tmp_path):
     D = _corpus(400, 16)
     gen = iter([np.asarray(D[:200]), np.asarray(D[200:])])
