@@ -45,6 +45,14 @@ PALLAS_MAX_DOCS = 20_000
 N_SERVE = 192
 SERVE_DEPTH = 3
 SERVE_BATCH = 32
+# live_index section: queries per drive, append block, delta capacity (one
+# open delta must absorb the whole drive's appends — steady state means a
+# CONSTANT segment count, which is what makes zero recompiles assertable)
+N_LIVE = 160
+LIVE_APPEND_BLOCK = 128
+LIVE_DELTA_CAP = 16384
+LIVE_APPEND_RATES = {"append_0": 0.0, "append_low": 256.0,
+                     "append_high": 2048.0}   # rows/s
 
 
 def _bench(fn, *args, iters: int = ITERS) -> float:
@@ -343,6 +351,151 @@ def _serve_pipeline(Dh, pruner, Q_raw, emit) -> dict:
                 configs=configs)
 
 
+def _live_index(Dh, pruner, Q_raw, emit) -> dict:
+    """Serve QPS under concurrent live appends vs the static baseline.
+
+    Per dtype {f32, int8}, the same Poisson tape drives four servers at
+    ~0.8x the fused batched capacity:
+
+      * ``static``      — monolithic ``DenseIndex`` (the pre-segment
+                          architecture: appends would require a rebuild);
+      * ``append_0``    — ``SegmentedIndex`` server, no appends (the cost
+                          of the segmented read path itself);
+      * ``append_low`` / ``append_high`` — a background ``IndexUpdater``
+                          appends raw documents at that rate while the
+                          drive runs; every append swaps a fresh segment
+                          set into the server atomically.
+
+    Each segmented row also records the number of search-path jit
+    compilations during the timed drive (``recompiles_steady``) — the
+    acceptance bar is ZERO: deltas dispatch at fixed padded capacity with
+    traced live counts, so corpus growth never stalls serving on a
+    compile. ``benchmarks/run.py`` schema-checks all of this before
+    BENCH_perf.json is written.
+    """
+    from repro.core.index import SegmentedIndex, segment_jit_cache_size
+    from repro.core.maintenance import IndexUpdater
+    from repro.launch.serve import RetrievalServer, _drive_open
+    d_raw = int(pruner.state.d)
+    Q = np.asarray(Q_raw)
+    Qs = np.tile(Q, (N_LIVE // len(Q) + 1, 1))[:N_LIVE]
+    W, mean = pruner.projection()
+    rng = np.random.default_rng(42)
+    configs = {}
+    for dtype in ("f32", "int8"):
+        quant = dtype == "int8"
+        idx = DenseIndex.build(Dh, quantize_int8=quant)
+        tb = _bench(lambda q: idx.search_projected(q, W, k=K, mean=mean),
+                    jnp.asarray(Qs[:SERVE_BATCH])) / 1e6
+        rate = 0.8 * SERVE_BATCH / tb
+
+        rows = {}
+        srv = RetrievalServer(idx, pruner, k=K, max_batch=SERVE_BATCH,
+                              pipeline_depth=SERVE_DEPTH)
+        res = _drive_open(srv, Qs, rate=rate)
+        rows["static"] = _serve_mode_row(res, srv.worker_stats())
+        srv.close()
+
+        for name, arate in LIVE_APPEND_RATES.items():
+            seg = SegmentedIndex.from_index(idx,
+                                            delta_capacity=LIVE_DELTA_CAP)
+            srv = RetrievalServer(seg, pruner, k=K, max_batch=SERVE_BATCH,
+                                  pipeline_depth=SERVE_DEPTH)
+            up = IndexUpdater(pruner=pruner, index=seg, server=srv,
+                              delta_capacity=LIVE_DELTA_CAP)
+            # warm appends (open + a provably NON-widening extend at the
+            # live block size: 0.5x rows already present) + query: compile
+            # the delta scan, the 2-segment merge, the append-side
+            # projection and the extend's update-slice BEFORE the timed
+            # drive — everything after this is steady state (widening
+            # extends do a plain host requant + upload, no jit)
+            warm = rng.standard_normal(
+                (LIVE_APPEND_BLOCK, d_raw)).astype(np.float32)
+            up.add_documents(jnp.asarray(warm))
+            up.add_documents(jnp.asarray(0.5 * warm))
+            srv.query(Qs[0])
+            jit0 = segment_jit_cache_size()
+            n0 = up.index.n
+            stop = threading.Event()
+
+            def appender():
+                while not stop.is_set():
+                    t0 = time.perf_counter()
+                    up.add_documents(jnp.asarray(
+                        rng.standard_normal((LIVE_APPEND_BLOCK, d_raw))
+                        .astype(np.float32)))
+                    lag = (LIVE_APPEND_BLOCK / arate
+                           - (time.perf_counter() - t0))
+                    if lag > 0:
+                        stop.wait(lag)
+
+            th = None
+            if arate > 0:
+                th = threading.Thread(target=appender, daemon=True)
+                th.start()
+            res = _drive_open(srv, Qs, rate=rate)
+            if th is not None:
+                stop.set()
+                th.join(timeout=30.0)
+            recompiles = segment_jit_cache_size() - jit0
+            rows[name] = dict(_serve_mode_row(res, srv.worker_stats()),
+                              appended_rows=int(up.index.n - n0),
+                              swaps=int(srv.swap_count),
+                              recompiles_steady=int(recompiles))
+            srv.close()
+        configs[f"dense_{dtype}"] = dict(
+            n=int(Dh.shape[0]), dim=int(Dh.shape[1]), rate_qps=float(rate),
+            **rows)
+        emit(f"live_index_dense_{dtype},{rows['append_high']['p50_ms']*1e3:.0f},"
+             f"static={rows['static']['worker_qps']:.1f}qps "
+             f"seg={rows['append_0']['worker_qps']:.1f}qps "
+             f"low={rows['append_low']['worker_qps']:.1f}qps"
+             f"(+{rows['append_low']['appended_rows']}) "
+             f"high={rows['append_high']['worker_qps']:.1f}qps"
+             f"(+{rows['append_high']['appended_rows']}r/"
+             f"{rows['append_high']['swaps']}sw) "
+             f"recompiles={rows['append_high']['recompiles_steady']}")
+    return dict(meta=dict(n_queries=int(N_LIVE),
+                          append_block=int(LIVE_APPEND_BLOCK),
+                          delta_capacity=int(LIVE_DELTA_CAP),
+                          append_rates_rows_per_s={
+                              k: float(v)
+                              for k, v in LIVE_APPEND_RATES.items()},
+                          rate_policy="0.8x fused batched capacity"),
+                configs=configs)
+
+
+def _serve_bucketing(Dh, pruner, Q_raw, emit) -> dict:
+    """Pad-to-max vs batch-shape bucketing at LOW load (0.2x capacity):
+    partial batches dominate there, so padding every one of them to
+    ``max_batch`` burns up to 4x the needed scan compute — bucketing pads
+    to the next of {8, 16, 32} instead, for a handful of extra compiles
+    (absorbed by ``warmup()``, not paid mid-serve)."""
+    from repro.launch.serve import RetrievalServer, _drive_open
+    Q = np.asarray(Q_raw)
+    Qs = np.tile(Q, (N_LIVE // len(Q) + 1, 1))[:N_LIVE]
+    W, mean = pruner.projection()
+    idx = DenseIndex.build(Dh)
+    tb = _bench(lambda q: idx.search_projected(q, W, k=K, mean=mean),
+                jnp.asarray(Qs[:SERVE_BATCH])) / 1e6
+    rate = 0.2 * SERVE_BATCH / tb
+    out = {"rate_qps": float(rate), "n": int(Dh.shape[0])}
+    for mode, bucketed in (("pad_to_max", False), ("bucketed", True)):
+        srv = RetrievalServer(idx, pruner, k=K, max_batch=SERVE_BATCH,
+                              pipeline_depth=SERVE_DEPTH,
+                              bucket_batches=bucketed)
+        srv.warmup()
+        res = _drive_open(srv, Qs, rate=rate)
+        out[mode] = _serve_mode_row(res, srv.worker_stats())
+        srv.close()
+    emit(f"serve_bucketing,{out['bucketed']['p50_ms']*1e3:.0f},"
+         f"@{rate:.1f}qps p50 {out['pad_to_max']['p50_ms']:.2f}->"
+         f"{out['bucketed']['p50_ms']:.2f}ms p99 "
+         f"{out['pad_to_max']['p99_ms']:.2f}->"
+         f"{out['bucketed']['p99_ms']:.2f}ms")
+    return out
+
+
 def run(emit=print) -> dict:
     # structured corpus (trained-encoder spectral regime) — recall under
     # pruning is meaningless on isotropic gaussians
@@ -404,6 +557,13 @@ def run(emit=print) -> dict:
     # raw d-dim queries through the fused search_projected hot path
     results["serve_pipeline"] = _serve_pipeline(Dh, pruner, np.asarray(Q),
                                                 emit)
+
+    # live segmented index: serve QPS while a background updater appends
+    # (zero steady-state recompiles asserted by the schema check), plus the
+    # batch-shape bucketing A/B at low load
+    results["live_index"] = _live_index(Dh, pruner, np.asarray(Q), emit)
+    results["serve_bucketing"] = _serve_bucketing(Dh, pruner, np.asarray(Q),
+                                                  emit)
 
     # cold start: committed on-disk artifact -> first answered query — the
     # restart path ``serve.py --load-index`` takes. One-shot by nature

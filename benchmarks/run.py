@@ -22,6 +22,11 @@ BENCH_PERF_PATH = REPO_ROOT / "BENCH_perf.json"
 # a refactor that silently drops a bench section must fail CI, not ship a
 # BENCH_perf.json that quietly stopped tracking the serving trajectory
 _SERVE_MODE_KEYS = ("qps", "p50_ms", "p95_ms", "p99_ms", "worker_qps")
+# live_index rows per config: the static baseline + the segmented server at
+# each append rate; segmented rows must additionally report append/swap
+# telemetry and a ZERO steady-state recompile count
+_LIVE_ROWS = ("static", "append_0", "append_low", "append_high")
+_LIVE_APPEND_KEYS = ("appended_rows", "swaps", "recompiles_steady")
 
 
 def check_perf_schema(results: dict) -> None:
@@ -45,6 +50,32 @@ def check_perf_schema(results: dict) -> None:
         if not row["match"]:
             raise SystemExit(f"serve_pipeline.{name}: pipelined results "
                              f"diverged from the sync path (match=False)")
+    li = results.get("live_index")
+    if not isinstance(li, dict) or not isinstance(li.get("configs"), dict) \
+            or not li["configs"]:
+        raise SystemExit("BENCH_perf.json schema: missing or empty "
+                         "'live_index.configs' section")
+    for name, cfg in li["configs"].items():
+        for rowname in _LIVE_ROWS:
+            if rowname not in cfg:
+                raise SystemExit(f"live_index.{name}: missing "
+                                 f"'{rowname}' row")
+            missing = [k for k in _SERVE_MODE_KEYS if k not in cfg[rowname]]
+            if missing:
+                raise SystemExit(f"live_index.{name}.{rowname}: missing "
+                                 f"keys {missing}")
+            if rowname.startswith("append"):
+                missing = [k for k in _LIVE_APPEND_KEYS
+                           if k not in cfg[rowname]]
+                if missing:
+                    raise SystemExit(f"live_index.{name}.{rowname}: missing "
+                                     f"keys {missing}")
+                if cfg[rowname]["recompiles_steady"] != 0:
+                    raise SystemExit(
+                        f"live_index.{name}.{rowname}: "
+                        f"{cfg[rowname]['recompiles_steady']} steady-state "
+                        f"recompiles — appends must never stall serving on "
+                        f"a jit compile (fixed-capacity delta contract)")
 
 
 def main() -> None:

@@ -1,35 +1,46 @@
-"""Index maintenance: incremental updates + PCA drift monitoring.
+"""Index maintenance: segmented live growth + drift-triggered compaction.
 
 Beyond-paper production plumbing for the pruned index. The paper shows the
 transform is robust out-of-domain (RQ2) and to small fit samples (RQ3) —
-this module turns those findings into operational policy:
+this module turns those findings into operational policy over a
+**segmented** index (``repro.core.index.SegmentedIndex``):
 
   * ``IndexUpdater.add_documents`` — new documents are rotated with the
-    EXISTING ``W_m`` and appended (no refit, no reindex of old docs): the
-    offline artefact stays valid as the corpus grows. With a ``store``
-    attached, every append also lands durably on disk, so incremental
-    growth survives a restart.
+    EXISTING ``W_m`` and appended to the open *delta segment* (no refit, no
+    reindex of old docs). Each delta carries its OWN int8 scale, widened
+    per append block when needed, so nothing ever clips against the base's
+    frozen scale — the clip problem the monolithic updater could only
+    *measure* is killed at the root. With a ``store`` attached, every
+    append mirrors durably to disk (the quantised bytes on disk are the
+    bytes being served); with a ``server`` attached, every append installs
+    the new segment set atomically between in-flight batches
+    (``RetrievalServer.swap_index``).
   * ``drift_score`` — fraction of new-batch embedding energy captured by
     the kept subspace, ``||X W_m||² / ||X||²``, compared to the energy the
     subspace captured at fit time. A ratio near 1 ⇒ the rotation still
     fits (paper RQ2 regime); a falling ratio quantifies when the corpus
     distribution has moved enough to warrant an offline refit.
-  * ``clip_fraction`` — int8 appends quantise with the *frozen* per-dim
-    scale; values outside ±127·scale silently clip, degrading scores with
-    no signal in the drift metric (clipping is per-value, drift is
-    per-subspace). The updater tracks the fraction of clipped values over
-    everything appended so far and folds it into ``needs_refit``.
-  * ``needs_refit`` — thresholded policy hook for the serving controller.
+  * ``scale_divergence`` / ``delta_fraction`` — how far the delta scales
+    have widened past the base's, and how much of the corpus lives outside
+    the base. Either climbing is the compaction signal.
+  * ``needs_refit`` — thresholded policy over all three signals.
+  * ``compact()`` — streaming re-build of base+deltas into ONE fresh base
+    segment (same rotation, fresh corpus-wide scale) through
+    ``StaticPruner.build_index_to(already_projected=True)``; commits
+    atomically at the store path, swaps into the server, retires the old
+    segments. ``compact_async()`` runs it off-thread — appends that land
+    mid-compaction are reconciled onto the new base before the swap.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import DenseIndex
+from repro.core.index import DenseIndex, SegmentedIndex, ShardedDenseIndex
 from repro.core.pruning import StaticPruner
 
 
@@ -44,7 +55,10 @@ def captured_energy(X: jax.Array, pruner: StaticPruner) -> float:
 
 @dataclasses.dataclass
 class IndexUpdater:
-    """Pruned index + transform with incremental growth and drift tracking.
+    """Segmented pruned index + transform with live growth and compaction.
+
+    ``index`` may be handed in as a bare ``DenseIndex``/``ShardedDenseIndex``
+    (it is wrapped as a single-base ``SegmentedIndex``) or as a segment set.
 
     ``fit_energy`` may be left unset (a directly-constructed updater): the
     reference energy is then derived lazily from the fitted state — for an
@@ -54,41 +68,57 @@ class IndexUpdater:
     needed.
 
     ``store``: an optional ``IndexStore`` (or path) the updater appends
-    through — each ``add_documents`` block is durably appended so the
-    on-disk artifact tracks the in-memory index.
+    through — every delta mutation lands durably so the on-disk artifact
+    tracks the in-memory segments bit-for-bit. ``server``: an optional
+    ``RetrievalServer`` that receives the new segment set via
+    ``swap_index`` after every mutation.
     """
 
     pruner: StaticPruner
-    index: DenseIndex
+    index: SegmentedIndex
     fit_energy: float | None = None  # energy on the fit corpus (reference)
     store: object | None = None      # IndexStore | str | None
-    # int8 clip telemetry over everything appended so far
-    clipped_values: int = 0
-    appended_values: int = 0
+    server: object | None = None     # RetrievalServer | None
+    delta_capacity: int = 4096
+    # telemetry
+    appended_rows: int = 0
+    compactions: int = 0
+    _lock: threading.RLock = dataclasses.field(default_factory=threading.RLock,
+                                               repr=False, compare=False)
 
     def __post_init__(self):
         from repro.core.store import IndexStore
-        if isinstance(self.store, (str, bytes)) or hasattr(self.store, "__fspath__"):
+        if isinstance(self.store, (str, bytes)) or hasattr(self.store,
+                                                           "__fspath__"):
             self.store = IndexStore.open(self.store)
+        if isinstance(self.index, (DenseIndex, ShardedDenseIndex)):
+            self.index = SegmentedIndex.from_index(
+                self.index, delta_capacity=self.delta_capacity)
 
     @classmethod
     def build(cls, corpus: jax.Array, *, cutoff: float = 0.5,
               quantize_int8: bool = False,
-              store_path: str | None = None) -> "IndexUpdater":
+              store_path: str | None = None,
+              delta_capacity: int = 4096) -> "IndexUpdater":
         """Fit + build in memory; with ``store_path``, also persist the
         artifact and attach the committed store for durable appends."""
         pruner = StaticPruner(cutoff=cutoff).fit(corpus)
-        index = pruner.build_index(corpus, quantize_int8=quantize_int8)
+        base = pruner.build_index(corpus, quantize_int8=quantize_int8)
         store = None
         if store_path is not None:
             from repro.core.store import save_index
-            store = save_index(store_path, index, pruner=pruner)
-        return cls(pruner=pruner, index=index,
-                   fit_energy=captured_energy(corpus, pruner), store=store)
+            store = save_index(store_path, base, pruner=pruner)
+        return cls(pruner=pruner,
+                   index=SegmentedIndex.from_index(
+                       base, delta_capacity=delta_capacity),
+                   fit_energy=captured_energy(corpus, pruner), store=store,
+                   delta_capacity=delta_capacity)
 
     @classmethod
-    def from_store(cls, store, *, backend: str = "jnp") -> "IndexUpdater":
-        """Rehydrate updater state from a committed artifact (cold start).
+    def from_store(cls, store, *, backend: str = "jnp",
+                   mesh=None, delta_capacity: int = 4096) -> "IndexUpdater":
+        """Rehydrate updater state from a committed artifact (cold start) —
+        base AND delta segments, each with its own scale.
 
         ``fit_energy`` stays lazy — the fit corpus is not in the store, and
         the eigenvalue identity gives the same reference.
@@ -97,41 +127,85 @@ class IndexUpdater:
         if not isinstance(store, IndexStore):
             store = IndexStore.open(store)
         return cls(pruner=store.load_pruner(),
-                   index=DenseIndex.load(store, backend=backend),
-                   store=store)
+                   index=SegmentedIndex.load(store, mesh=mesh,
+                                             backend=backend,
+                                             delta_capacity=delta_capacity),
+                   store=store, delta_capacity=delta_capacity)
 
     # -- incremental growth ------------------------------------------------
-    def add_documents(self, new_embs: jax.Array) -> float:
-        """Rotate with the existing W_m and append (no refit).
+    def add_documents(self, new_embs: jax.Array) -> int:
+        """Rotate with the existing W_m and append to the open delta.
 
-        Returns this batch's int8 clip fraction (0.0 on float indexes):
-        the fraction of quantised values that fell outside ±127 under the
-        frozen per-dim scale and were clipped.
+        Copy-on-write: a NEW segment set is built, mirrored to the store
+        (open/extend/widen ops with the exact quantised bytes), then
+        installed into the attached server atomically. Nothing ever clips:
+        an int8 delta's scale widens per-dim to fit every appended block
+        (requantised from the exact f32 staging — the rewrite is bounded by
+        the open delta's capacity). Returns the number of rows appended.
         """
-        pruned = self.pruner.prune_index(new_embs)
-        batch_clip = 0.0
-        if self.index.scale is not None:
-            raw = jnp.round(pruned / self.index.scale[None, :])
-            clipped = jnp.sum(jnp.abs(raw) > 127)
-            batch_clip = float(clipped) / max(raw.size, 1)
-            self.clipped_values += int(clipped)
-            self.appended_values += int(raw.size)
-            new = jnp.clip(raw, -127, 127).astype(jnp.int8)
-        else:
-            new = pruned.astype(self.index.vectors.dtype)
-        self.index = DenseIndex(
-            vectors=jnp.concatenate([self.index.vectors, new], axis=0),
-            scale=self.index.scale, backend=self.index.backend)
-        if self.store is not None:
-            self.store.append(np.asarray(new))
-        return batch_clip
+        pruned = np.asarray(self.pruner.prune_index(new_embs), np.float32)
+        with self._lock:
+            new_index, ops = self.index.append_with_ops(pruned)
+            self._mirror_ops(ops, new_index)
+            self.index = new_index
+            self.appended_rows += pruned.shape[0]
+            # swap INSIDE the lock: a preempted thread must not install a
+            # segment set an already-completed append/compaction superseded
+            if self.server is not None:
+                self.server.swap_index(new_index)
+        return int(pruned.shape[0])
 
+    def _mirror_ops(self, ops, new_index: SegmentedIndex) -> None:
+        if self.store is None:
+            return
+        names = [v.name for v in self.store.segments()]
+        for op in ops:
+            kind, di = op[0], op[1]
+            seg = new_index.deltas[di]
+            seg_idx = di + 1                       # store segment position
+            if kind == "open":
+                _, _, stored, scale = op
+                name = self.store.add_delta(scale=scale,
+                                            capacity=seg.capacity)
+                names.append(name)
+                if stored.shape[0]:
+                    self.store.append(stored, segment=name)
+            elif kind == "extend":
+                _, _, stored = op
+                self.store.append(stored, segment=names[seg_idx])
+            else:                                   # widen: bounded rewrite
+                _, _, stored, scale = op
+                self.store.replace_segment(names[seg_idx], [stored],
+                                           scale=scale)
+
+    # -- telemetry ---------------------------------------------------------
     @property
     def clip_fraction(self) -> float:
-        """Fraction of clipped values over every int8 append so far."""
-        if self.appended_values == 0:
-            return 0.0
-        return self.clipped_values / self.appended_values
+        """Always 0.0: per-delta scales widen instead of clipping. Kept as
+        an explicit invariant (and for dashboards that tracked it when the
+        monolithic updater could only report the damage)."""
+        return 0.0
+
+    @property
+    def delta_fraction(self) -> float:
+        """Fraction of the corpus living outside the compacted base."""
+        n = self.index.n
+        return self.index.delta_rows / n if n else 0.0
+
+    def scale_divergence(self) -> float:
+        """max over deltas of max-dim ratio (delta scale / base scale) —
+        how far live data has outgrown the base's quantisation regime.
+        1.0 when unquantised or no deltas have widened past the base."""
+        base_scale = self.index.base.scale
+        if base_scale is None or not self.index.deltas:
+            return 1.0
+        b = np.asarray(base_scale, np.float64)
+        worst = 1.0
+        for d in self.index.deltas:
+            if d.scale is not None:
+                worst = max(worst, float(np.max(np.asarray(d.scale,
+                                                           np.float64) / b)))
+        return worst
 
     # -- drift policy ------------------------------------------------------
     def _reference_energy(self) -> float:
@@ -158,29 +232,162 @@ class IndexUpdater:
             self._reference_energy(), 1e-12)
 
     def needs_refit(self, new_embs: jax.Array, threshold: float = 0.9,
-                    clip_threshold: float = 0.01) -> bool:
-        """Refit when the subspace drifted *or* the frozen int8 scale is
-        clipping more than ``clip_threshold`` of appended values — clipping
-        degrades scores even when the subspace still fits."""
-        if self.clip_fraction > clip_threshold:
+                    delta_threshold: float = 0.5,
+                    scale_threshold: float = 4.0) -> bool:
+        """Compact/refit when the subspace drifted, the deltas hold more
+        than ``delta_threshold`` of the corpus, *or* a delta scale has
+        widened more than ``scale_threshold``x past the base's — widened
+        scales never clip, but they do coarsen the quantisation grid for
+        everything in that delta."""
+        if self.delta_fraction > delta_threshold:
+            return True
+        if self.scale_divergence() > scale_threshold:
             return True
         return self.drift_score(new_embs) < threshold
 
-    def refit(self, corpus: jax.Array) -> None:
-        """Offline refit on the current corpus distribution."""
-        cutoff = self.pruner.effective_cutoff
-        quant = self.index.scale is not None
-        fresh = IndexUpdater.build(corpus, cutoff=cutoff,
-                                   quantize_int8=quant)
-        self.pruner, self.index, self.fit_energy = (fresh.pruner, fresh.index,
-                                                    fresh.fit_energy)
-        self.clipped_values = self.appended_values = 0
+    # -- compaction --------------------------------------------------------
+    def _iter_dequant_rows(self, index: SegmentedIndex, block_rows: int):
+        """Stream base+delta rows as f32 blocks in global id order.
+
+        With a store attached the base streams from DISK (host O(block));
+        otherwise from the device copy. Deltas stream from their exact f32
+        staging either way.
+        """
         if self.store is not None:
-            # the old artifact is invalid under the new rotation — replace
-            # it atomically at the same path
-            from repro.core.store import save_index
-            self.store = save_index(self.store.path, self.index,
-                                    pruner=self.pruner)
+            base_view = self.store.segments()[0]
+            scale = base_view.scale()
+            for lo in range(0, base_view.n, block_rows):
+                rows = base_view.read_rows(lo, min(lo + block_rows,
+                                                   base_view.n))
+                rows = rows.astype(np.float32)
+                if scale is not None:
+                    rows = rows * scale[None, :].astype(np.float32)
+                yield rows
+        else:
+            base = index.base
+            scale = (None if base.scale is None
+                     else np.asarray(base.scale, np.float32))
+            v = np.asarray(base.vectors[:base.n])
+            for lo in range(0, base.n, block_rows):
+                rows = v[lo:lo + block_rows].astype(np.float32)
+                if scale is not None:
+                    rows = rows * scale[None, :]
+                yield rows
+        for d in index.deltas:
+            for lo in range(0, d.n_real, block_rows):
+                yield d.raw[lo:lo + block_rows]
+
+    def compact(self, *, block_rows: int = 65536) -> None:
+        """Merge base + deltas into ONE fresh base segment and swap it in.
+
+        The rotation (``W_m``) is unchanged — compaction re-homogenises the
+        quantisation: a single fresh corpus-wide scale replaces the base's
+        frozen scale and every widened delta scale. Rows stream through
+        ``StaticPruner.build_index_to(already_projected=True)`` (O(block)
+        host memory, int8 spill). With a store attached the new artifact
+        builds UNLOCKED at a sidecar path (``<path>.compact`` — appends
+        keep mirroring to the live store meanwhile) and only the final
+        directory swap into the live path (``commit_dir`` rename-aside — a
+        crash leaves the old or the new artifact, never neither) happens
+        under the updater lock, so no append mirror can interleave with the
+        replacement and scribble a stale manifest over the fresh artifact.
+        The attached server receives the new segment set between batches.
+        Appends racing a background compaction are reconciled: rows landed
+        after the snapshot re-append onto the fresh base before the swap.
+        """
+        snapshot = self.index
+        quant = snapshot.quantized
+        mesh = getattr(snapshot.base, "mesh", None)
+        backend = snapshot.base.backend
+        if self.store is not None:
+            from repro.checkpoint.manager import commit_dir
+            from repro.core.store import IndexStore
+            side_path = self.store.path + ".compact"
+            side = self.pruner.build_index_to(
+                side_path,
+                lambda: self._iter_dequant_rows(snapshot, block_rows),
+                quantize_int8=quant, already_projected=True,
+                meta={"compactions": self.compactions + 1})
+            # the base's device arrays materialise from the sidecar BEFORE
+            # the lock: the expensive load never blocks appends
+            if mesh is not None:
+                base = ShardedDenseIndex.load(side, mesh, backend=backend,
+                                              merge=snapshot.base.merge)
+            else:
+                base = DenseIndex.load(side, backend=backend)
+        else:
+            side_path = None
+            rows = np.concatenate(
+                list(self._iter_dequant_rows(snapshot, block_rows)))
+            if mesh is not None:
+                base = ShardedDenseIndex.build(jnp.asarray(rows), mesh,
+                                               quantize_int8=quant,
+                                               backend=backend,
+                                               merge=snapshot.base.merge)
+            else:
+                base = DenseIndex.build(jnp.asarray(rows),
+                                        quantize_int8=quant, backend=backend)
+        fresh = SegmentedIndex.from_index(base,
+                                          delta_capacity=self.delta_capacity)
+        with self._lock:
+            if side_path is not None:
+                commit_dir(side_path, self.store.path)   # atomic retire
+                self.store = IndexStore.open(self.store.path)
+            # reconcile rows appended while the compaction streamed: the
+            # current segment set extends the snapshot row-for-row, so the
+            # tail [snapshot.n:) is exactly the racing appends
+            tail = []
+            for d in self.index.deltas:
+                tail.append(d.raw)
+            tail_rows = (np.concatenate(tail)[snapshot.delta_rows:]
+                         if tail else np.zeros((0, snapshot.dim), np.float32))
+            if tail_rows.shape[0]:
+                fresh, ops = fresh.append_with_ops(tail_rows)
+                self._mirror_ops(ops, fresh)
+            self.index = fresh
+            self.compactions += 1
+            if self.server is not None:
+                self.server.swap_index(fresh)
+
+    def compact_async(self, **kw) -> threading.Thread:
+        """Run ``compact`` off-thread: the serving path keeps dispatching
+        against the old segment set until the finished base swaps in."""
+        th = threading.Thread(target=self.compact, kwargs=kw, daemon=True)
+        th.start()
+        return th
+
+    def refit(self, corpus: jax.Array) -> None:
+        """Full offline refit (new rotation) on the current corpus
+        distribution — unlike ``compact``, this re-fits ``W_m`` itself.
+        The base keeps its layout: a sharded base refits onto the same
+        mesh/merge/backend instead of collapsing onto one device."""
+        cutoff = self.pruner.effective_cutoff
+        quant = self.index.quantized
+        mesh = getattr(self.index.base, "mesh", None)
+        backend = self.index.base.backend
+        pruner = StaticPruner(cutoff=cutoff).fit(corpus)
+        if mesh is not None:
+            base = ShardedDenseIndex.build(
+                pruner.prune_index(corpus), mesh, quantize_int8=quant,
+                backend=backend, merge=self.index.base.merge)
+        else:
+            base = pruner.build_index(corpus, quantize_int8=quant,
+                                      backend=backend)
+        new_index = SegmentedIndex.from_index(
+            base, delta_capacity=self.delta_capacity)
+        energy = captured_energy(corpus, pruner)
+        with self._lock:
+            self.pruner, self.index, self.fit_energy = (pruner, new_index,
+                                                        energy)
+            self.appended_rows = 0
+            if self.store is not None:
+                # the old artifact is invalid under the new rotation —
+                # replace it atomically at the same path
+                from repro.core.store import save_index
+                self.store = save_index(self.store.path, self.index.base,
+                                        pruner=self.pruner)
+            if self.server is not None:
+                self.server.swap_index(self.index, pruner=self.pruner)
 
     def search(self, queries: jax.Array, k: int = 10):
         return self.index.search(self.pruner.transform_queries(queries), k=k)

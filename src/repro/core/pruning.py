@@ -101,7 +101,8 @@ class StaticPruner:
     def build_index_to(self, path: str, corpus_batches, *,
                        quantize_int8: bool = False,
                        dtype: jnp.dtype | None = None,
-                       meta: dict | None = None):
+                       meta: dict | None = None,
+                       already_projected: bool = False):
         """Streaming offline build: fit + prune + (quantize) straight to disk.
 
         ``corpus_batches`` is the corpus as row blocks — either a sequence
@@ -111,18 +112,29 @@ class StaticPruner:
         is rejected loudly rather than silently yielding an empty second
         pass.
 
-        ``quantize_int8`` no longer costs a third corpus pass: the write
-        pass projects each block once, accumulates the per-dim absmax
-        while spilling the projected f32 block to a temp file, then
-        quantises from the spill under the final corpus-wide scale — the
-        corpus itself is read exactly twice (fit + write; once when
-        already fitted). The spill is O(n·m) *disk*, not memory.
+        ``already_projected=True`` declares the blocks are ALREADY in the
+        pruned m-dim space (f32) — the fit and projection are skipped and
+        only the absmax/quantise/write machinery runs. This is the segment
+        compaction path: ``IndexUpdater.compact`` streams dequantised rows
+        of base+deltas through here to mint a fresh base with one fresh
+        corpus-wide scale.
 
-        Peak host memory is O(block_rows × d): each block is rotated,
-        optionally quantised with the corpus-wide per-dim scale, and
-        appended to the store; the full (n, d) corpus and the full (n, m)
-        pruned index never materialise. Returns the committed
-        ``IndexStore``.
+        ``quantize_int8`` costs no third corpus pass, and the spill is now
+        int8, not f32: each projected block is quantised under the
+        *provisional running* per-dim scale (its own absmax included, so
+        the spill never clips) and the scale it was spilled under is
+        recorded. Blocks spilled after the scale stabilised are already
+        bit-exact under the final corpus-wide scale and append as-is;
+        blocks spilled before a later block widened the scale are
+        re-projected in ONE bounded re-read pass (only the stale blocks are
+        projected — the rest of the generator is just advanced past). The
+        committed artifact is bit-identical to quantising exact f32
+        projections under the final scale, while spill bytes drop 4x
+        (``meta['spill_bytes']``, ``meta['requant_blocks']`` record both).
+
+        Peak host memory is O(block_rows × d): the full (n, d) corpus and
+        the full (n, m) pruned index never materialise. Returns the
+        committed ``IndexStore``.
         """
         import os
         import shutil
@@ -141,57 +153,92 @@ class StaticPruner:
                 "build reads the corpus in multiple passes")
 
         if self.state is None:
+            if already_projected:
+                raise RuntimeError("already_projected=True requires a "
+                                   "fitted pruner (the blocks carry no "
+                                   "d-dim information to fit from)")
             self.fit_streaming(passes())
         m = self.kept_dims
 
+        def project(b) -> np.ndarray:
+            if already_projected:
+                b = np.asarray(b, np.float32)
+                if b.ndim != 2 or b.shape[1] != m:
+                    raise ValueError(f"already_projected blocks must be "
+                                     f"(rows, {m}), got {tuple(b.shape)}")
+                return b
+            return np.asarray(_pca.transform(jnp.asarray(b), self.state, m),
+                              np.float32)
+
+        spill_stats = {}
         writer = IndexStore.create(path)
         with writer:
             writer.put_pca(self.state)
             if quantize_int8:
-                # fused absmax+write pass: project each block exactly once,
-                # track the running per-dim absmax, spill the f32 projection
-                # to disk; once the corpus-wide scale is known, quantise
-                # from the spill (no extra corpus pass, memory stays
-                # O(block) — only the spill directory grows). The spill
+                # int8 spill under the provisional running scale. The spill
                 # lives NEXT TO the target store, not in the system temp
                 # dir: /tmp is often RAM-backed tmpfs, which would silently
                 # turn the O(n·m) spill back into host memory.
+                from repro.core.quantization import quantize_with_scale
                 spill = tempfile.mkdtemp(
                     prefix="idxbuild_spill_",
                     dir=os.path.dirname(os.path.abspath(path)) or ".")
                 try:
                     absmax = np.zeros((m,), np.float32)
-                    files = []
+                    files: list[str] = []
+                    scales: list[np.ndarray] = []
+                    spill_bytes = 0
                     for b in passes():
-                        p = np.asarray(
-                            _pca.transform(jnp.asarray(b), self.state, m),
-                            np.float32)
+                        p = project(b)
                         absmax = np.maximum(absmax, np.abs(p).max(axis=0))
+                        s_prov = np.maximum(absmax, 1e-12) / 127.0
+                        q = quantize_with_scale(p, s_prov)
                         f = os.path.join(spill, f"{len(files):06d}.npy")
-                        np.save(f, p)
+                        np.save(f, q)
+                        spill_bytes += q.nbytes
                         files.append(f)
+                        scales.append(s_prov)
                     scale = np.maximum(absmax, 1e-12) / 127.0
                     writer.set_scale(scale)
+                    stale = {i for i, s in enumerate(scales)
+                             if not np.array_equal(s, scale)}
+                    if stale:
+                        # bounded re-read: advance the generator block by
+                        # block, re-projecting ONLY the stale ones and
+                        # overwriting their spill with the exact final-scale
+                        # quantisation (still O(block) memory)
+                        seen = 0
+                        for i, b in enumerate(passes()):
+                            if i in stale:
+                                p = project(b)
+                                np.save(files[i],
+                                        quantize_with_scale(p, scale))
+                                seen += 1
+                                if seen == len(stale):
+                                    break
+                        if seen != len(stale):
+                            raise RuntimeError(
+                                f"corpus iterator yielded fewer blocks on "
+                                f"the re-read pass ({seen}/{len(stale)} "
+                                f"stale blocks revisited)")
                     for f in files:
-                        p = np.load(f, mmap_mode="r")
-                        writer.append(np.clip(np.round(p / scale[None, :]),
-                                              -127, 127).astype(np.int8))
-                        del p
+                        writer.append(np.load(f, mmap_mode="r"))
                         os.remove(f)
+                    spill_stats = dict(spill_bytes=int(spill_bytes),
+                                       spill_dtype="int8",
+                                       requant_blocks=int(len(stale)))
                 finally:
                     shutil.rmtree(spill, ignore_errors=True)
             else:
                 for b in passes():
-                    p = np.asarray(
-                        _pca.transform(jnp.asarray(b), self.state, m),
-                        np.float32)
+                    p = project(b)
                     if dtype is not None:
                         p = np.asarray(jnp.asarray(p).astype(dtype))
                     writer.append(p)
             info = dict(kept_dims=int(m), source_dim=int(self.state.d),
                         cutoff=float(self.effective_cutoff),
                         centered=bool(self.state.centered),
-                        quantize_int8=bool(quantize_int8))
+                        quantize_int8=bool(quantize_int8), **spill_stats)
             info.update(meta or {})
             return writer.commit(meta=info)
 

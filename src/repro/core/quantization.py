@@ -10,6 +10,22 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_with_scale(X: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Host-side symmetric int8 under a GIVEN per-dim scale — the single
+    definition of the round/clip/cast every store, segment, and spill path
+    must share: bit-identity between disk, memory, and spill hinges on all
+    of them quantising identically."""
+    return np.clip(np.round(np.asarray(X, np.float32) / scale[None, :]),
+                   -127, 127).astype(np.int8)
+
+
+def scale_for(X: np.ndarray) -> np.ndarray:
+    """Per-dim symmetric scale covering X's absmax (host-side)."""
+    return (np.maximum(np.abs(np.asarray(X, np.float32)).max(axis=0), 1e-12)
+            / 127.0).astype(np.float32)
 
 
 def quantize_int8_per_dim(X: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -26,6 +26,20 @@ written and fsynced first, then the manifest is atomically replaced
 (``os.replace`` + dir fsync). A crash between the two leaves an orphan
 blob the manifest never names — still a valid store.
 
+**Segments.** A live store may carry a ``segments`` list in its manifest:
+segment 0 is the immutable base (the offline PCA-pruned artifact), later
+entries are growable *delta* segments, each with the chunked-blob format
+above plus its OWN ``scale_file`` (per-segment int8 scale — the fix for
+the frozen-scale clip problem) and a ``capacity`` (the fixed padded shape
+deltas dispatch at). The top-level ``n``/``chunks``/``scale_file`` fields
+are always the derived global view (total rows, all chunks in id order,
+the base's scale), so a pre-segment manifest IS a valid single-base
+segmented store — ``IndexStore.open`` on an old artifact exposes exactly
+one base segment, and old artifacts round-trip untouched. Segment
+mutations (``add_delta`` / ``append`` / ``replace_segment``) all follow
+the blob-then-manifest-swap protocol; whole-store replacement (compaction
+building a fresh base) reuses ``checkpoint.manager.commit_dir``.
+
 Reads are host-streamed: chunks are memory-mapped (``np.load(mmap_mode=
 'r')``), so assembling a device-resident index never needs a second full
 host copy — ``DenseIndex.load`` copies one chunk at a time to device, and
@@ -76,6 +90,20 @@ def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
     queries).
     """
     import numpy as _np
+    from repro.core.index import SegmentedIndex
+    if isinstance(index, SegmentedIndex):
+        # base commits through the normal path, then each delta is replayed
+        # as a durable segment mutation — the artifact round-trips through
+        # SegmentedIndex.load with every per-segment scale intact
+        store = save_index(path, index.base, pruner=pruner, meta=meta,
+                           chunk_rows=chunk_rows)
+        for d in index.deltas:
+            name = store.add_delta(
+                scale=None if d.scale is None else _np.asarray(d.scale),
+                capacity=d.capacity)
+            if d.n_real:
+                store.append(_np.asarray(d.vectors[:d.n_real]), segment=name)
+        return store
     writer = IndexStoreWriter(path)
     with writer:
         if pruner is not None:
@@ -117,6 +145,77 @@ def _read_chunk(path: str, logical: str, mmap: bool = True) -> np.ndarray:
     arr = np.load(path, mmap_mode="r" if mmap else None)
     view = _STORAGE_VIEW.get(logical)
     return arr.view(_as_numpy_dtype(logical)) if view is not None else arr
+
+
+def _read_rows_from_chunks(path: str, chunks: list, logical: str, dim: int,
+                           total: int, start: int, stop: int) -> np.ndarray:
+    """Materialise rows [start, stop) of a chunk list — host O(stop-start)."""
+    if not 0 <= start <= stop <= total:
+        raise ValueError(f"row range [{start}, {stop}) outside [0, {total})")
+    out = np.empty((stop - start, dim), _as_numpy_dtype(logical))
+    pos = 0          # global row index at the current chunk's head
+    filled = 0
+    for c in chunks:
+        rows = c["rows"]
+        lo, hi = max(start, pos), min(stop, pos + rows)
+        if lo < hi:
+            chunk = _read_chunk(os.path.join(path, c["file"]), logical)
+            out[filled:filled + (hi - lo)] = chunk[lo - pos:hi - pos]
+            filled += hi - lo
+        pos += rows
+        if pos >= stop:
+            break
+    return out
+
+
+@dataclasses.dataclass
+class SegmentView:
+    """Read handle on one segment of a (possibly pre-segment) store.
+
+    Duck-types the slice of the ``IndexStore`` read API the index loaders
+    use (``n``/``dim``/``dtype``/``iter_chunks``/``read_rows``/``scale``),
+    so ``DenseIndex.load`` / ``ShardedDenseIndex.load`` work unchanged on a
+    single segment — that is how ``SegmentedIndex.load`` assembles its
+    base. Row indices are segment-local; ``offset`` is the segment's
+    global doc-id base.
+    """
+
+    store_path: str
+    name: str
+    kind: str                      # "base" | "delta"
+    entry: dict                    # manifest segment entry (shared ref)
+    offset: int                    # global row offset of this segment
+    dim: int
+    dtype_name: str
+
+    @property
+    def n(self) -> int:
+        return int(self.entry["n"])
+
+    @property
+    def dtype(self) -> np.dtype:
+        return _as_numpy_dtype(self.dtype_name)
+
+    @property
+    def capacity(self) -> int | None:
+        c = self.entry.get("capacity")
+        return None if c is None else int(c)
+
+    def iter_chunks(self, mmap: bool = True) -> Iterator[np.ndarray]:
+        for c in self.entry["chunks"]:
+            yield _read_chunk(os.path.join(self.store_path, c["file"]),
+                              self.dtype_name, mmap=mmap)
+
+    def read_rows(self, start: int, stop: int) -> np.ndarray:
+        return _read_rows_from_chunks(self.store_path, self.entry["chunks"],
+                                      self.dtype_name, self.dim, self.n,
+                                      start, stop)
+
+    def scale(self) -> np.ndarray | None:
+        f = self.entry.get("scale_file")
+        if f is None:
+            return None
+        return np.load(os.path.join(self.store_path, f))
 
 
 class IndexStoreWriter:
@@ -264,6 +363,32 @@ class IndexStore:
             f = m.get(key)
             if f is not None and not os.path.isfile(os.path.join(self.path, f)):
                 raise IndexStoreError(f"{self.path}: missing {key} blob {f}")
+        segs = m.get("segments")
+        if segs is not None:
+            if not segs or segs[0].get("kind") != "base":
+                raise IndexStoreError(
+                    f"{self.path}: segments must start with a base segment")
+            if sum(int(s["n"]) for s in segs) != m["n"]:
+                raise IndexStoreError(
+                    f"{self.path}: segment rows sum "
+                    f"{sum(int(s['n']) for s in segs)} != manifest n={m['n']}")
+            seg_files = [c["file"] for s in segs for c in s["chunks"]]
+            if seg_files != [c["file"] for c in m["chunks"]]:
+                raise IndexStoreError(
+                    f"{self.path}: top-level chunks are not the "
+                    f"concatenation of the segment chunk lists")
+            for s in segs:
+                f = s.get("scale_file")
+                if f is not None and not os.path.isfile(
+                        os.path.join(self.path, f)):
+                    raise IndexStoreError(
+                        f"{self.path}: segment {s['name']} missing scale "
+                        f"blob {f}")
+                cap = s.get("capacity")
+                if cap is not None and int(s["n"]) > int(cap):
+                    raise IndexStoreError(
+                        f"{self.path}: segment {s['name']} holds {s['n']} "
+                        f"rows over its capacity {cap}")
 
     # -- shape -------------------------------------------------------------
     @property
@@ -302,23 +427,9 @@ class IndexStore:
         Chunks outside the range are never touched (mmap slicing), which is
         what lets a sharded load pull one device's rows at a time.
         """
-        if not 0 <= start <= stop <= self.n:
-            raise ValueError(f"row range [{start}, {stop}) outside [0, {self.n})")
-        out = np.empty((stop - start, self.dim), self.dtype)
-        pos = 0          # global row index at the current chunk's head
-        filled = 0
-        for c in self.manifest["chunks"]:
-            rows = c["rows"]
-            lo, hi = max(start, pos), min(stop, pos + rows)
-            if lo < hi:
-                chunk = _read_chunk(os.path.join(self.path, c["file"]),
-                                    self.manifest["dtype"])
-                out[filled:filled + (hi - lo)] = chunk[lo - pos:hi - pos]
-                filled += hi - lo
-            pos += rows
-            if pos >= stop:
-                break
-        return out
+        return _read_rows_from_chunks(self.path, self.manifest["chunks"],
+                                      self.manifest["dtype"], self.dim,
+                                      self.n, start, stop)
 
     def scale(self) -> np.ndarray | None:
         f = self.manifest.get("scale_file")
@@ -343,13 +454,124 @@ class IndexStore:
         pruner.state = state
         return pruner
 
-    # -- append (incremental growth) --------------------------------------
-    def append(self, block: np.ndarray) -> None:
-        """Durably append a row chunk to a committed store.
+    # -- segments ----------------------------------------------------------
+    @property
+    def is_segmented(self) -> bool:
+        return "segments" in self.manifest
 
-        Protocol: chunk blob fsynced first, then the manifest atomically
-        replaced (``os.replace``) and the directory fsynced — the manifest
-        swap is the commit point.
+    def _segment_entries(self) -> list[dict]:
+        """Manifest segment list, synthesising the single-base view for a
+        pre-segment artifact (the backward-compat normalisation)."""
+        segs = self.manifest.get("segments")
+        if segs is not None:
+            return segs
+        return [{"name": "base", "kind": "base", "n": self.manifest["n"],
+                 "chunks": self.manifest["chunks"],
+                 "scale_file": self.manifest.get("scale_file")}]
+
+    def segments(self) -> list[SegmentView]:
+        """Read handles on every segment, base first, with global offsets."""
+        views, offset = [], 0
+        for s in self._segment_entries():
+            views.append(SegmentView(store_path=self.path, name=s["name"],
+                                     kind=s["kind"], entry=s, offset=offset,
+                                     dim=self.dim,
+                                     dtype_name=self.manifest["dtype"]))
+            offset += int(s["n"])
+        return views
+
+    @property
+    def flat_loadable(self) -> bool:
+        """Whether the global chunk list is a coherent single index: one
+        segment, no scales at all, or every segment sharing one scale —
+        mixed per-segment scales need ``SegmentedIndex.load``."""
+        segs = self._segment_entries()
+        if len(segs) == 1:
+            return True
+        scales = [SegmentView(self.path, s["name"], s["kind"], s, 0,
+                              self.dim, self.manifest["dtype"]).scale()
+                  for s in segs]
+        if all(s is None for s in scales):
+            return True
+        if any(s is None for s in scales):
+            return False
+        return all(np.array_equal(scales[0], s) for s in scales[1:])
+
+    # -- append / segment mutation (incremental growth) --------------------
+    def _next_blob(self, prefix: str = "vectors") -> str:
+        """Unique blob name: a monotonically increasing sequence survives
+        segment rewrites that delete earlier blobs (names never reused)."""
+        seq = int(self.manifest.get("blob_seq",
+                                    len(self.manifest["chunks"])))
+        return f"{prefix}_{seq:06d}.npy", seq + 1
+
+    def _swap_manifest(self, manifest: dict) -> None:
+        """Atomic manifest replacement — the commit point of every segment
+        mutation (all blobs must already be fsynced)."""
+        tmp_manifest = os.path.join(self.path, MANIFEST + ".tmp")
+        write_json_fsync(tmp_manifest, manifest)
+        os.replace(tmp_manifest, os.path.join(self.path, MANIFEST))
+        fsync_dir(self.path)
+        self.manifest = manifest
+
+    def _rebuild_global(self, manifest: dict) -> dict:
+        """Re-derive the top-level n/chunks/scale_file from the segment
+        list, keeping pre-segment readers (and validation) working on the
+        global view. The top-level scale_file must track the BASE
+        segment's: a base rewrite (``append_migrating`` widening the base)
+        replaces and deletes the old scale blob, and a stale top-level
+        pointer would fail validation forever after."""
+        segs = manifest["segments"]
+        manifest["chunks"] = [c for s in segs for c in s["chunks"]]
+        manifest["n"] = sum(int(s["n"]) for s in segs)
+        manifest["scale_file"] = segs[0].get("scale_file")
+        return manifest
+
+    def add_delta(self, scale: np.ndarray | None = None,
+                  capacity: int | None = None) -> str:
+        """Open a new (empty) delta segment with its own scale; returns its
+        name. Converts a pre-segment manifest to the segmented layout (the
+        existing vectors become the base segment, bit-untouched)."""
+        manifest = json.loads(json.dumps(self.manifest))   # deep copy
+        segs = manifest.setdefault("segments", self._segment_entries())
+        name = f"delta-{len(segs):03d}"
+        entry = {"name": name, "kind": "delta", "n": 0, "chunks": [],
+                 "scale_file": None}
+        if capacity is not None:
+            entry["capacity"] = int(capacity)
+        if scale is not None:
+            fname, seq = self._next_blob(f"scale_{name}")
+            np.save(os.path.join(self.path, fname), np.asarray(scale,
+                                                               np.float32))
+            fsync_file(os.path.join(self.path, fname))
+            entry["scale_file"] = fname
+            manifest["blob_seq"] = seq
+        segs.append(entry)
+        self._swap_manifest(self._rebuild_global(manifest))
+        return name
+
+    def _find_segment(self, manifest: dict, segment: str | None) -> dict:
+        segs = manifest.get("segments")
+        if segs is None:
+            if segment not in (None, "base"):
+                raise IndexStoreError(
+                    f"{self.path}: no segment {segment!r} (pre-segment store)")
+            return manifest                     # legacy: top-level IS the base
+        if segment is None:
+            return segs[-1]                     # the open (last) segment
+        for s in segs:
+            if s["name"] == segment:
+                return s
+        raise IndexStoreError(f"{self.path}: no segment {segment!r}")
+
+    def append(self, block: np.ndarray, *, segment: str | None = None) -> None:
+        """Durably append a row chunk (storage dtype) to a segment.
+
+        ``segment=None`` targets the open (last) segment — the base on a
+        pre-segment store, the newest delta on a segmented one. Protocol:
+        chunk blob fsynced first, then the manifest atomically replaced
+        (``os.replace``) and the directory fsynced — the manifest swap is
+        the commit point.
         """
         block = np.asarray(block)
         if block.ndim != 2 or block.shape[1] != self.dim:
@@ -358,14 +580,106 @@ class IndexStore:
         if block.dtype.name != self.manifest["dtype"]:
             raise ValueError(f"append dtype {block.dtype.name} != store dtype "
                              f"{self.manifest['dtype']}")
-        fname = f"vectors_{len(self.manifest['chunks']):06d}.npy"
+        fname, seq = self._next_blob()
         _write_chunk(os.path.join(self.path, fname), block)
-        manifest = dict(self.manifest)
-        manifest["chunks"] = self.manifest["chunks"] + [
+        manifest = json.loads(json.dumps(self.manifest))
+        target = self._find_segment(manifest, segment)
+        target["chunks"] = target["chunks"] + [
             {"file": fname, "rows": int(block.shape[0])}]
-        manifest["n"] = self.n + int(block.shape[0])
-        tmp_manifest = os.path.join(self.path, MANIFEST + ".tmp")
-        write_json_fsync(tmp_manifest, manifest)
-        os.replace(tmp_manifest, os.path.join(self.path, MANIFEST))
-        fsync_dir(self.path)
-        self.manifest = manifest
+        target["n"] = int(target["n"]) + int(block.shape[0])
+        manifest["blob_seq"] = seq
+        if "segments" in manifest:
+            manifest = self._rebuild_global(manifest)
+        self._swap_manifest(manifest)
+
+    def replace_segment(self, segment: str, blocks, *,
+                        scale: np.ndarray | None = None) -> None:
+        """Atomically rewrite one segment's contents (and scale).
+
+        Used when a delta's int8 scale widens: the requantised rows replace
+        the old chunks in one manifest swap. New blobs are written and
+        fsynced first; the old blobs are deleted only after the swap, so a
+        crash leaves either the old or the new segment — orphan blobs from
+        the crash window are ignored by ``open`` (never named by the
+        manifest). The rewrite cost is bounded by the segment's size.
+        """
+        manifest = json.loads(json.dumps(self.manifest))
+        if "segments" not in manifest:
+            manifest["segments"] = self._segment_entries()
+        target = self._find_segment(manifest, segment)
+        old_files = [c["file"] for c in target["chunks"]]
+        old_scale = target.get("scale_file")
+        chunks, total = [], 0
+        for block in blocks:
+            block = np.asarray(block)
+            if block.dtype.name != self.manifest["dtype"]:
+                raise ValueError(
+                    f"replace dtype {block.dtype.name} != store dtype "
+                    f"{self.manifest['dtype']}")
+            fname, seq = self._next_blob()
+            manifest["blob_seq"] = seq
+            self.manifest["blob_seq"] = seq    # keep the counter monotonic
+            _write_chunk(os.path.join(self.path, fname), block)
+            chunks.append({"file": fname, "rows": int(block.shape[0])})
+            total += int(block.shape[0])
+        if scale is not None:
+            fname, seq = self._next_blob(f"scale_{segment}")
+            manifest["blob_seq"] = seq
+            self.manifest["blob_seq"] = seq
+            np.save(os.path.join(self.path, fname),
+                    np.asarray(scale, np.float32))
+            fsync_file(os.path.join(self.path, fname))
+            target["scale_file"] = fname
+        target["chunks"] = chunks
+        target["n"] = total
+        self._swap_manifest(self._rebuild_global(manifest))
+        for f in old_files + ([old_scale] if scale is not None and old_scale
+                              else []):
+            try:
+                os.remove(os.path.join(self.path, f))
+            except OSError:
+                pass
+
+    def append_migrating(self, block: np.ndarray, *,
+                         segment: str | None = None) -> bool:
+        """Append f32 rows to an int8 segment, widening its scale instead
+        of clipping (the scale-migration path, scoped per segment).
+
+        If any value of ``block`` falls outside ±127 under the segment's
+        current scale, the scale widens per-dim to fit and the segment's
+        existing chunks requantise under it (dequantise with the old scale,
+        requantise with the new — within half an old LSB of exact; callers
+        holding the exact f32 rows should use ``replace_segment``
+        directly). Returns True when the scale widened. On float stores
+        this is a plain cast-and-append.
+        """
+        block = np.atleast_2d(np.asarray(block, np.float32))
+        views = {v.name: v for v in self.segments()}
+        target = self._find_segment(self.manifest, segment)
+        name = target.get("name", "base")
+        view = views.get(name, self.segments()[0])
+        if self.dtype != np.int8:
+            self.append(block.astype(self.dtype), segment=segment)
+            return False
+        from repro.core.quantization import quantize_with_scale, scale_for
+        old = view.scale()
+        if old is None:
+            raise IndexStoreError(
+                f"{self.path}: segment {name} is int8 but has no scale")
+        need = scale_for(block)
+        widened = bool((need > old).any())
+        if not widened:
+            self.append(quantize_with_scale(block, old), segment=segment)
+            return False
+        new_scale = np.maximum(old, need).astype(np.float32)
+        requant = [
+            quantize_with_scale(c.astype(np.float32) * old[None, :],
+                                new_scale)
+            for c in view.iter_chunks()]
+        requant.append(quantize_with_scale(block, new_scale))
+        if "segments" not in self.manifest:
+            # pre-segment store: the rewrite touches the whole (base)
+            # artifact — exactly the unbounded cost segmenting avoids
+            self.manifest["segments"] = self._segment_entries()
+        self.replace_segment(name, requant, scale=new_scale)
+        return True

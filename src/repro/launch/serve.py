@@ -36,6 +36,16 @@ serves from it — no PCA refit, no index rebuild, and the index is
 host-streamed onto the device(s) (per-shard when ``--sharded``). The
 cold-start time (open store -> first answered query) is printed.
 
+``--live-append R`` wraps the index in a ``SegmentedIndex`` and appends
+synthetic documents at R rows/s WHILE serving: each append builds a new
+segment set (open delta with its own int8 scale) and installs it into the
+running server atomically between batches (``swap_index``), then a final
+compaction rebuilds base+deltas into one fresh base mid-serve — the full
+live-index lifecycle under traffic, zero steady-state recompiles.
+``--bucket-batches`` pads partial batches to the next bucket in
+{8, 16, …, max_batch} instead of always max_batch (less pad compute at
+low load for a handful of extra compiles).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 --dim 256 \
       --cutoff 0.5 --queries 256 --batch 32
@@ -48,6 +58,11 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 \
       --quantize-int8 --save-index /tmp/idx
   PYTHONPATH=src python -m repro.launch.serve --load-index /tmp/idx --sharded
+  PYTHONPATH=src python -m repro.launch.serve --live-append 300 \
+      --open-loop 200            # segmented index: append while serving,
+                                 # atomic swaps, final mid-serve compaction
+  PYTHONPATH=src python -m repro.launch.serve --bucket-batches \
+      --open-loop 50             # low load: pad to {8,16,32}, not max_batch
 """
 from __future__ import annotations
 
@@ -65,6 +80,22 @@ from repro.core import DenseIndex, IndexStore, ShardedDenseIndex, StaticPruner
 from repro.core.store import save_index
 from repro.data.synthetic import make_dataset
 from repro.util import force_host_device_count
+
+
+class Reply(queue.Queue):
+    """Single-slot reply future for one submitted query.
+
+    ``completed_at`` is stamped by the completer (``perf_counter``) the
+    instant the batch's results post — BEFORE the client is woken. Latency
+    accounting reads the stamp instead of the collector's own clock, so it
+    no longer assumes replies complete in submission (FIFO) order: a
+    multi-priority scheduler, a mid-drain index swap, or a slow collector
+    can reorder/delay observation without corrupting the measurement.
+    """
+
+    def __init__(self):
+        super().__init__(maxsize=1)
+        self.completed_at: float | None = None
 
 
 class BatchingQueue:
@@ -91,8 +122,8 @@ class BatchingQueue:
         self._items: deque = deque()
         self._cv = threading.Condition()
 
-    def submit(self, qvec: np.ndarray) -> "queue.Queue":
-        reply: queue.Queue = queue.Queue(maxsize=1)
+    def submit(self, qvec: np.ndarray) -> "Reply":
+        reply = Reply()
         with self._cv:
             self._items.append((qvec, reply))
             self._cv.notify_all()
@@ -158,20 +189,44 @@ class RetrievalServer:
     counted once) and ``service_qps`` (queries / summed per-batch service
     time — matches the old sync metric, but double-counts overlapped
     seconds when pipelined).
+
+    ``bucket_batches=True`` pads partial batches to the next bucket in
+    {8, 16, 32, …, max_batch} instead of always ``max_batch`` — a handful
+    of compiled shapes traded for up to 4x less pad compute at low load
+    (call ``warmup()`` to pre-compile every bucket).
+
+    ``swap_index`` installs a NEW index (a fresh ``SegmentedIndex`` after a
+    live append or compaction) atomically *between* batches: the worker
+    snapshots (index, projection) under a lock per dispatch, so every batch
+    runs entirely against one segment set, and in-flight batches keep the
+    old set's arrays alive until their replies post — no reply is dropped
+    or computed against a half-swapped state.
     """
+
+    _KEEP = object()   # swap_index sentinel: leave the projection alone
 
     def __init__(self, index: DenseIndex | ShardedDenseIndex,
                  pruner: StaticPruner | None,
                  k: int = 10, max_batch: int = 32,
-                 pipeline_depth: int = 3):
+                 pipeline_depth: int = 3,
+                 bucket_batches: bool = False):
         self.index = index
         self.pruner = pruner
         self.k = k
         self.max_batch = max_batch
+        self.bucket_batches = bucket_batches
+        caps, c = [], min(8, max_batch)
+        while c < max_batch:
+            caps.append(c)
+            c *= 2
+        caps.append(max_batch)
+        self._buckets = tuple(caps)
         self.pipeline_depth = max(1, pipeline_depth)
         self.batcher = BatchingQueue(max_batch=max_batch)
         # (size, t_dispatch, t_done) per executed batch
         self.batch_log: list[tuple[int, float, float]] = []
+        self._index_lock = threading.Lock()
+        self.swap_count = 0
         self._proj = None
         if pruner is not None:
             W, mean = pruner.projection()
@@ -219,36 +274,87 @@ class RetrievalServer:
                 reply.put(e)
             traceback.print_exc()
 
+    def _bucket_for(self, b: int) -> int:
+        if not self.bucket_batches:
+            return self.max_batch
+        for cap in self._buckets:
+            if cap >= b:
+                return cap
+        return self.max_batch
+
     def _dispatch(self, vecs: np.ndarray):
         """Enqueue one batch's fused search; returns device arrays
         immediately (JAX async dispatch) — the caller decides when to
         block on the transfer back.
 
-        Batches are zero-padded to ``max_batch`` rows so the server only
-        ever dispatches ONE compiled shape: without this, every distinct
-        partial-batch size jit-compiles a fresh 100k-row scan mid-serve —
-        hundreds of ms of compile stampeding the worker exactly when load
-        is ragged. Pad rows cost compute but are sliced off before reply;
-        exact-search results are row-independent, so real rows are
-        bit-identical to an unpadded dispatch.
+        Batches are zero-padded to a FIXED set of compiled shapes — always
+        ``max_batch``, or the next bucket in {8, 16, …, max_batch} with
+        ``bucket_batches`` — so a novel partial-batch size never
+        jit-compiles a fresh full-index scan mid-serve (hundreds of ms of
+        compile stampeding the worker exactly when load is ragged). Pad
+        rows cost compute but are sliced off before reply; exact-search
+        results are row-independent, so real rows are bit-identical to an
+        unpadded dispatch.
+
+        The (index, projection) pair is snapshotted under the swap lock:
+        the whole batch runs against one consistent segment set even if
+        ``swap_index`` lands mid-flight.
         """
+        with self._index_lock:
+            index, proj = self.index, self._proj
         b = len(vecs)
-        if b < self.max_batch:
+        cap = self._bucket_for(b)
+        if b < cap:
             vecs = np.concatenate(
-                [vecs, np.zeros((self.max_batch - b, vecs.shape[1]),
-                                vecs.dtype)])
+                [vecs, np.zeros((cap - b, vecs.shape[1]), vecs.dtype)])
         q = jnp.asarray(vecs)
-        if self._proj is not None:
-            W, mean = self._proj
-            return self.index.search_projected(q, W, k=self.k, mean=mean)
-        return self.index.search(q, k=self.k)
+        if proj is not None:
+            W, mean = proj
+            return index.search_projected(q, W, k=self.k, mean=mean)
+        return index.search(q, k=self.k)
 
     def _post(self, scores, ids, replies, t0):
         scores = np.asarray(scores)   # blocks on this batch's D2H only
         ids = np.asarray(ids)
-        self.batch_log.append((len(replies), t0, time.perf_counter()))
+        t1 = time.perf_counter()
+        self.batch_log.append((len(replies), t0, t1))
         for i, r in enumerate(replies):
+            r.completed_at = t1       # stamp BEFORE the client can wake
             r.put((scores[i], ids[i]))
+
+    def swap_index(self, index, pruner=_KEEP) -> None:
+        """Atomically install a new index (segment set) for future batches.
+
+        Runs between batches by construction: ``_dispatch`` snapshots
+        (index, projection) under the same lock, in-flight batches hold
+        references to the old arrays, and the completer drains them
+        normally — accepted work is never dropped and no batch ever sees a
+        half-swapped state. Pass ``pruner`` to atomically replace the
+        query projection too (a refit changed ``W_m``); by default the
+        existing projection is kept (appends/compaction never change it).
+        """
+        proj = self._proj
+        if pruner is not self._KEEP:
+            proj = None
+            if pruner is not None:
+                W, mean = pruner.projection()
+                proj = (jnp.asarray(W),
+                        None if mean is None else jnp.asarray(mean))
+        with self._index_lock:
+            self.index = index
+            self._proj = proj
+            self.swap_count += 1
+
+    def warmup(self) -> None:
+        """Compile every dispatch shape (each bucket) before taking load —
+        without this, the first partial batch of each bucket size pays its
+        compile mid-serve."""
+        d = (self._proj[0].shape[0] if self._proj is not None
+             else self.index.dim)
+        caps = self._buckets if self.bucket_batches else (self.max_batch,)
+        for cap in caps:
+            jax.block_until_ready(
+                self._dispatch(np.zeros((cap, d), np.float32)))
 
     # -- synchronous worker (pipeline_depth <= 1) ---------------------------
     def _loop(self):
@@ -394,7 +500,10 @@ def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
     exposing queueing and letting the pipeline actually fill. Latency is
     measured from each query's *scheduled* arrival (not the submit call),
     so submitter lag counts against the server, never for it (no
-    coordinated omission). One warmup query absorbs compilation.
+    coordinated omission), and ends at the reply's ``completed_at`` stamp
+    posted by the completer — not at the collector's own clock — so
+    out-of-FIFO completions (priorities, swaps) measure correctly. One
+    warmup query absorbs compilation.
 
     Returns achieved/offered qps, p50/p95/p99 latency, and — with
     ``collect`` — the per-query (scores, ids) in submission order, used by
@@ -420,7 +529,9 @@ def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
                 out = reply.get(timeout=120.0)
                 if isinstance(out, BaseException):
                     raise out
-                lat[i] = time.perf_counter() - t_arr
+                t_done = getattr(reply, "completed_at", None)
+                lat[i] = (t_done if t_done is not None
+                          else time.perf_counter()) - t_arr
                 if collect:
                     results[i] = out
         except BaseException as e:   # noqa: BLE001 — must reach the driver
@@ -462,6 +573,21 @@ def main() -> None:
     ap.add_argument("--pipeline-depth", type=int, default=3,
                     help="max batches in flight (stager/completer overlap); "
                          "<=1 runs the legacy synchronous worker loop")
+    ap.add_argument("--bucket-batches", action="store_true",
+                    help="pad partial batches to the next bucket in "
+                         "{8,16,...,max_batch} instead of always max_batch "
+                         "(less pad compute at low load, a few more "
+                         "compiles)")
+    ap.add_argument("--live-append", type=float, default=0.0,
+                    metavar="ROWS_PER_S",
+                    help="serve through a SegmentedIndex and append "
+                         "synthetic documents at this rate during the "
+                         "drive — every append swaps a fresh segment set "
+                         "into the running server (then compacts at the "
+                         "end)")
+    ap.add_argument("--delta-capacity", type=int, default=4096,
+                    help="fixed padded capacity of each delta segment "
+                         "(the compiled dispatch shape for live appends)")
     ap.add_argument("--open-loop", type=float, default=0.0, metavar="QPS",
                     help="additionally drive Poisson arrivals at QPS "
                          "(open loop: submissions never wait on replies) "
@@ -531,7 +657,8 @@ def main() -> None:
                   f"dtype={index.vectors.dtype})")
         server = RetrievalServer(index, pruner, k=args.k,
                                  max_batch=args.batch,
-                                 pipeline_depth=args.pipeline_depth)
+                                 pipeline_depth=args.pipeline_depth,
+                                 bucket_batches=args.bucket_batches)
         server.query(Q[0])   # first answered query closes the cold start
         print(f"[serve] cold start (open store -> first query): "
               f"{(time.perf_counter() - t_cold)*1e3:.1f}ms")
@@ -568,7 +695,46 @@ def main() -> None:
                   f"({st.nbytes/2**20:.1f} MiB on disk, n={st.n})")
 
         server = RetrievalServer(index, pruner, k=args.k, max_batch=args.batch,
-                                 pipeline_depth=args.pipeline_depth)
+                                 pipeline_depth=args.pipeline_depth,
+                                 bucket_batches=args.bucket_batches)
+
+    updater = None
+    append_stop = threading.Event()
+    appender = None
+    if args.live_append > 0:
+        from repro.core import SegmentedIndex
+        from repro.core.maintenance import IndexUpdater
+        seg = SegmentedIndex.from_index(index,
+                                        delta_capacity=args.delta_capacity)
+        server.swap_index(seg)
+        updater = IndexUpdater(pruner=pruner, index=seg, server=server,
+                               delta_capacity=args.delta_capacity)
+        rng_app = np.random.default_rng(123)
+        app_block = 64
+
+        def _appender():
+            while not append_stop.is_set():
+                t0 = time.perf_counter()
+                updater.add_documents(jnp.asarray(
+                    rng_app.standard_normal((app_block, args.dim))
+                    .astype(np.float32)))
+                delay = (app_block / args.live_append
+                         - (time.perf_counter() - t0))
+                if delay > 0:
+                    append_stop.wait(delay)
+
+        appender = threading.Thread(target=_appender, daemon=True)
+        print(f"[serve] live-append: {args.live_append:.0f} rows/s "
+              f"(blocks of {app_block}, delta capacity "
+              f"{args.delta_capacity})")
+        appender.start()
+
+    if args.bucket_batches:
+        # pre-compile every bucket shape: without this the first partial
+        # batch of each size pays its compile mid-drive — the exact
+        # stampede bucketing exists to avoid
+        server.warmup()
+
     wall, lat = _drive(server, Q)
     stats = server.worker_stats()
     lat_ms = lat * 1e3
@@ -591,6 +757,20 @@ def main() -> None:
               f"p99={res['p99_ms']:.2f}ms  "
               f"worker={ostats['worker_qps']:.1f} qps "
               f"({ostats['occupancy']*100:.0f}% occupancy)")
+
+    if updater is not None:
+        append_stop.set()
+        appender.join(timeout=30.0)
+        print(f"[serve] live-append: +{updater.appended_rows} rows in "
+              f"{len(updater.index.deltas)} delta segment(s), "
+              f"{server.swap_count} atomic swaps; index now "
+              f"{updater.index.n} rows")
+        t0 = time.perf_counter()
+        updater.compact()
+        print(f"[serve] compaction: base+deltas -> one fresh base "
+              f"({updater.index.n} rows, fresh scale) in "
+              f"{(time.perf_counter() - t0)*1e3:.0f}ms; server swapped "
+              f"mid-serve (swap #{server.swap_count})")
     server.close()
 
     if args.compare_full and args.load_index:

@@ -29,7 +29,9 @@ def test_add_documents_int8_path():
     D = _corpus()
     up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True)
     up.add_documents(_corpus(seed=0, n=120, domain_seed=2)[:50])
-    assert up.index.vectors.dtype == jnp.int8
+    assert up.index.base.vectors.dtype == jnp.int8
+    assert up.index.deltas[0].vectors.dtype == jnp.int8
+    assert up.index.deltas[0].scale is not None     # its OWN scale
     s, ids = up.search(D[:2], k=5)
     assert np.isfinite(np.asarray(s)).all()
 
@@ -83,42 +85,63 @@ def test_drift_reference_centered_fit():
     assert abs(up.drift_score(D) - 1.0) < 5e-3
 
 
-def test_add_documents_clip_fraction_ood():
-    """Regression: an out-of-distribution append under the frozen int8
-    scale used to clip silently. The clip fraction must be tracked,
-    exposed, and trip needs_refit even when drift alone would not."""
+def test_ood_append_scale_policy_trips_refit():
+    """The frozen-scale regression, inverted: an out-of-distribution append
+    used to clip silently under the base's scale. Per-delta scales now
+    widen instead (clip_fraction is structurally zero), and the policy
+    signal is the scale DIVERGENCE between delta and base."""
     D = _corpus()
     up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True)
-    # in-distribution append: essentially no clipping
+    # in-distribution append: delta scale stays near the base's
     in_dom = _corpus(seed=0, n=200, domain_seed=4)[:100]
-    frac_in = up.add_documents(in_dom)
-    assert frac_in < 0.01
-    assert up.clip_fraction < 0.01
+    up.add_documents(in_dom)
+    assert up.clip_fraction == 0.0
+    assert up.scale_divergence() < 4.0
     assert not up.needs_refit(in_dom)
-    # OOD magnitudes: same subspace (drift blind), 50x the dynamic range
-    frac_ood = up.add_documents(50.0 * in_dom)
-    assert frac_ood > 0.5
-    assert up.clip_fraction > 0.01
+    # OOD magnitudes: same subspace (drift blind), 50x the dynamic range —
+    # nothing clips, but the delta's widened scale flags the divergence
+    up.add_documents(50.0 * in_dom)
+    assert up.clip_fraction == 0.0
+    assert up.scale_divergence() > 4.0
     # drift_score can't see it (same subspace, energy ratio unchanged)...
     assert up.drift_score(50.0 * in_dom) > 0.9
-    # ...but the clip policy trips the refit
+    # ...but the scale policy trips the refit
     assert up.needs_refit(50.0 * in_dom)
 
 
 def test_clip_fraction_zero_on_float_index():
     D = _corpus()
     up = IndexUpdater.build(D, cutoff=0.5)
-    frac = up.add_documents(1e6 * _corpus(seed=0, n=120, domain_seed=5)[:40])
-    assert frac == 0.0 and up.clip_fraction == 0.0
+    up.add_documents(1e6 * _corpus(seed=0, n=120, domain_seed=5)[:40])
+    assert up.clip_fraction == 0.0
+    assert up.scale_divergence() == 1.0             # unquantised: no scales
 
 
-def test_refit_resets_clip_telemetry():
+def test_delta_fraction_trips_refit():
+    """Compaction pressure: once the deltas hold most of the corpus, the
+    policy asks for a compaction even with zero drift."""
+    D = _corpus(n=400)
+    up = IndexUpdater.build(D, cutoff=0.5)
+    in_dom = _corpus(seed=0, n=900, domain_seed=7)[400:]
+    up.add_documents(in_dom)
+    assert up.delta_fraction > 0.5
+    # threshold=0 disables the drift leg: delta_fraction alone must trip
+    assert up.needs_refit(in_dom[:100], threshold=0.0)
+    up.compact()
+    assert up.delta_fraction == 0.0
+    assert not up.needs_refit(in_dom[:100], threshold=0.0)
+
+
+def test_refit_resets_segments_and_telemetry():
     D = _corpus()
     up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True)
     up.add_documents(50.0 * _corpus(seed=0, n=120, domain_seed=6)[:40])
-    assert up.clip_fraction > 0.0
+    assert up.scale_divergence() > 1.0
+    assert len(up.index.deltas) == 1
     up.refit(D)
-    assert up.clip_fraction == 0.0
+    assert up.scale_divergence() == 1.0
+    assert len(up.index.deltas) == 0
+    assert up.appended_rows == 0
 
 
 def test_captured_energy_bounds():

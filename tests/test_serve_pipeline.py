@@ -178,6 +178,29 @@ def test_open_loop_driver_reports(served):
     assert 0 < stats["occupancy"] <= 1.0
 
 
+def test_bucketed_batches_map_and_results(served):
+    """Batch-shape bucketing: partial batches pad to the next bucket in
+    {8, 16, ..., max_batch}, and the returned ids match the pad-to-max
+    server exactly (pad rows are inert; only the compiled shape differs)."""
+    D, pruner, index = served
+    server = RetrievalServer(index, pruner, k=5, max_batch=32,
+                             pipeline_depth=1, bucket_batches=True)
+    ref = RetrievalServer(index, pruner, k=5, max_batch=32,
+                          pipeline_depth=1, bucket_batches=False)
+    try:
+        assert server._buckets == (8, 16, 32)
+        assert [server._bucket_for(b) for b in (1, 8, 9, 16, 17, 32)] \
+            == [8, 8, 16, 16, 32, 32]
+        server.warmup()                        # compiles every bucket shape
+        for i in range(24):
+            _, ids_b = server.query(D[i])
+            _, ids_r = ref.query(D[i])
+            assert (np.asarray(ids_b) == np.asarray(ids_r)).all()
+    finally:
+        server.close()
+        ref.close()
+
+
 def test_pipeline_overlaps_batches_in_flight(served):
     """Under a saturating open-loop burst the stager must run ahead of the
     completer: with depth 3 the worker log shows batches whose dispatch

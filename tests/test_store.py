@@ -220,11 +220,16 @@ def test_streaming_build_peak_memory_is_o_block(tmp_path):
 
 def test_streaming_int8_build_two_corpus_passes(tmp_path):
     """The int8 build's absmax piggybacks on the write pass (projected
-    blocks spill to disk while the scale accumulates), so the corpus is
-    read exactly twice: once for the Gram fit, once to project+write —
-    down from three passes. Counted via generator restarts."""
-    D = _corpus(900, 48)
-    blocks = [np.asarray(D[i:i + 300]) for i in range(0, 900, 300)]
+    blocks spill to disk while the scale accumulates), so when the scale
+    stabilises in the first block the corpus is read exactly twice: once
+    for the Gram fit, once to project+write. Counted via generator
+    restarts. (A corpus whose absmax keeps growing pays one extra bounded
+    re-read pass for the stale blocks — see the spill test below.)"""
+    D = np.asarray(_corpus(900, 48))
+    # first block dominates the dynamic range per-dim: the provisional
+    # scale equals the final scale from block 0, so no block goes stale
+    blocks = [3.0 * D[:300], np.asarray(D[300:600]), np.asarray(D[600:])]
+    blocks = [np.asarray(b, np.float32) for b in blocks]
     calls = {"n": 0}
 
     def gen():
@@ -235,6 +240,7 @@ def test_streaming_int8_build_two_corpus_passes(tmp_path):
         str(tmp_path / "st"), gen, quantize_int8=True)
     assert calls["n"] == 2, f"expected 2 corpus passes, got {calls['n']}"
     assert st.n == 900 and st.dtype == np.int8
+    assert st.meta["requant_blocks"] == 0
 
     # an already-fitted pruner needs only the write pass
     pre = StaticPruner(cutoff=0.5)
@@ -245,6 +251,42 @@ def test_streaming_int8_build_two_corpus_passes(tmp_path):
     # identical artifact either way: same scale, same quantised rows
     np.testing.assert_array_equal(st.scale(), st2.scale())
     np.testing.assert_array_equal(st.read_rows(0, 900), st2.read_rows(0, 900))
+
+
+def test_streaming_int8_spill_is_int8_and_bit_identical(tmp_path):
+    """The spill is int8 (4x fewer bytes than the old f32 spill), blocks
+    whose provisional scale went stale are re-projected in one bounded
+    re-read pass, and the committed artifact is BIT-IDENTICAL to
+    quantising exact f32 projections under the final corpus-wide scale."""
+    from repro.core import pca as _pca
+    D = np.asarray(_corpus(900, 48))
+    blocks = [np.asarray(D[i:i + 300], np.float32) for i in range(0, 900, 300)]
+    calls = {"n": 0}
+
+    def gen():
+        calls["n"] += 1
+        yield from blocks
+
+    st = StaticPruner(cutoff=0.5).build_index_to(
+        str(tmp_path / "st"), gen, quantize_int8=True)
+    # generic corpus: absmax keeps growing -> fit + write + bounded re-read
+    assert calls["n"] <= 3
+    m = st.meta["kept_dims"]
+    assert st.meta["spill_dtype"] == "int8"
+    assert st.meta["spill_bytes"] == 900 * m          # int8: one byte/value
+    assert 0 <= st.meta["requant_blocks"] <= len(blocks)
+
+    # oracle: exact f32 projections quantised under the final scale
+    pre = StaticPruner(cutoff=0.5)
+    pre.fit_streaming(blocks)
+    proj = np.concatenate([
+        np.asarray(_pca.transform(jnp.asarray(b), pre.state, m), np.float32)
+        for b in blocks])
+    scale = (np.maximum(np.abs(proj).max(axis=0), 1e-12) / 127.0) \
+        .astype(np.float32)
+    want = np.clip(np.round(proj / scale[None, :]), -127, 127).astype(np.int8)
+    np.testing.assert_array_equal(st.scale(), scale)
+    np.testing.assert_array_equal(st.read_rows(0, 900), want)
 
 
 def test_streaming_int8_build_peak_memory_is_o_block(tmp_path):
