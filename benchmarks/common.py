@@ -4,11 +4,10 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import DenseIndex, StaticPruner
-from repro.core.metrics import evaluate_run, mean_metrics, wilcoxon_significant
+from repro.core import DenseIndex
+from repro.core.metrics import evaluate_run
 from repro.data.synthetic import make_dataset
 
 ENCODERS = ("tasb", "contriever", "ance")

@@ -31,7 +31,6 @@ import jax.numpy as jnp
 from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
 from repro.core.index import _scan_topk, _topk_merge
 from repro.core.store import IndexStore, save_index
-from repro.kernels import ops as kops
 
 N_DOCS = 100_000
 DIM = 768
@@ -191,9 +190,15 @@ class _LegacySyncServer:
         self.max_batch = max_batch
         self.q: "queue.Queue" = _q.Queue()
         self.batch_log: list = []   # (size, t0, t1) — same shape as the new log
-        self._stop = threading.Event()
+        self._log_lock = threading.Lock()   # worker_stats is borrowed from
+        self._stop = threading.Event()      # RetrievalServer and locks it
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
+
+    def reset_stats(self):
+        # single worker thread appends; same drive-side contract as
+        # RetrievalServer.reset_stats
+        self.batch_log.clear()
 
     def _next_batch(self):
         import queue as _q

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from benchmarks.common import (CUTOFFS, METRICS, QUERY_SETS, eval_system,
                                fmt_cell, load_all_datasets)
 from repro.core import StaticPruner
-from repro.core.metrics import mean_metrics, wilcoxon_significant
+from repro.core.metrics import wilcoxon_significant
 
 
 def run(datasets=None, emit=print) -> dict:

@@ -1,0 +1,57 @@
+"""Static analysis for the serving hot path — the repo's efficiency gate.
+
+The paper's value proposition is *offline, query-independent* efficiency.
+This repo banks that as three families of invariant that nothing in the
+type system enforces, so each gets a dedicated static analyzer:
+
+  * ``jaxpr_lints``   — trace every serving entry point and assert the
+    fused-dispatch contract: one compiled computation per dispatch, the
+    index operand streams in its storage dtype (no ``convert_element_type``
+    shadow-upcasting an int8/bf16 corpus), no host callbacks inside the
+    traced hot path, and jit-cache stability across a sweep of segment
+    live-counts/offsets (recompile detection without running traffic).
+  * ``pallas_budget`` — a VMEM/grid checker for ``topk_score_pallas`` and
+    ``pca_project``: resident bytes per (block_b, block_n, k, fold, dtype)
+    config from the kernels' own shared geometry, grid divisibility and
+    index-map bounds from the *traced* ``pallas_call``, rejected against a
+    configurable per-core budget.
+  * ``concurrency``   — an AST pass over the serving tier that builds the
+    guarded-field map per class, flags fields accessed both under and
+    outside their lock, detects lock-acquisition-order cycles, and flags
+    blocking device calls while a lock is held.
+
+``python -m repro.analysis`` runs all three against the live repo code,
+emits a machine-readable JSON report, subtracts the checked-in suppression
+baseline (``analysis_baseline.json``), and exits nonzero on any
+unsuppressed finding — the CI gate for the 2-6x wins in BENCH_perf.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit.
+
+    ``check`` is the lint id (``"jaxpr.extra-dispatch"``, …); ``where`` is
+    a *stable* location key (module:Class.method:field — never a line
+    number, so the suppression baseline survives unrelated edits);
+    ``severity`` is ``"error"`` (gates CI) or ``"warn"`` (reported only).
+    """
+
+    check: str
+    where: str
+    message: str
+    severity: str = "error"
+
+    @property
+    def key(self) -> str:
+        return f"{self.check}:{self.where}"
+
+    def to_json(self) -> dict:
+        return dict(check=self.check, where=self.where,
+                    message=self.message, severity=self.severity)
+
+
+__all__ = ["Finding"]

@@ -1,0 +1,64 @@
+"""CLI gate: ``python -m repro.analysis [--fail-on-findings]``.
+
+Runs the three analyzers against the live repo code, subtracts the
+checked-in suppression baseline, writes the machine-readable report, and
+(with ``--fail-on-findings``) exits 1 on any unsuppressed error-severity
+finding or stale suppression. This is the CI entry point.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+ANALYZERS = ("jaxpr", "pallas", "conc")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--only", default=",".join(ANALYZERS),
+                    help="comma list of analyzers to run "
+                         f"(default: {','.join(ANALYZERS)})")
+    ap.add_argument("--baseline", default="analysis_baseline.json",
+                    help="suppression baseline (missing file = empty)")
+    ap.add_argument("--json", default="ANALYSIS_report.json",
+                    help="report output path ('' disables)")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="override the Pallas per-core VMEM budget")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 on unsuppressed error findings or stale "
+                         "suppressions")
+    args = ap.parse_args(argv)
+
+    chosen = [s.strip() for s in args.only.split(",") if s.strip()]
+    unknown = set(chosen) - set(ANALYZERS)
+    if unknown:
+        ap.error(f"unknown analyzer(s): {sorted(unknown)}")
+
+    findings = []
+    if "jaxpr" in chosen:
+        from repro.analysis import jaxpr_lints
+        findings += jaxpr_lints.run()
+    if "pallas" in chosen:
+        from repro.analysis import pallas_budget
+        budget = (args.vmem_budget if args.vmem_budget is not None
+                  else pallas_budget.DEFAULT_BUDGET)
+        findings += pallas_budget.run(budget=budget)
+    if "conc" in chosen:
+        from repro.analysis import concurrency
+        findings += concurrency.run()
+
+    from repro.analysis.report import (apply_baseline, format_text,
+                                       load_baseline, write_report)
+    report = apply_baseline(findings, load_baseline(args.baseline))
+    if args.json:
+        write_report(report, args.json)
+        print(f"[analysis] report -> {args.json}")
+    print(format_text(report))
+
+    if args.fail_on_findings and (report.gating or report.stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Known-bad fixtures for the analyzer self-tests.
+
+Each module here violates exactly one invariant the analyzers exist to
+catch; ``tests/test_analysis.py`` asserts each produces its expected
+finding (and nothing else). These are NEVER imported by production code.
+"""
+
+#: a topk_score config whose double-buffered f32 strip alone (~64 MiB)
+#: dwarfs a 16 MiB core — must trip pallas.vmem-budget
+BAD_TOPK_CONFIG = dict(n=1_000_000, m=1024, B=256, k=100,
+                       block_n=8192, block_b=512, dtype="float32")

@@ -1,0 +1,58 @@
+"""Jaxpr-lint fixtures: each function violates one traced-hot-path
+invariant on purpose."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def upcasting_search(D_int8: jax.Array, scale: jax.Array, q: jax.Array,
+                     k: int = 10):
+    """The anti-pattern the storage-dtype lint exists for: dequantise the
+    ENTIRE int8 corpus to f32 before scanning — a 4x shadow copy in HBM
+    instead of per-strip in-register dequant."""
+    Df = D_int8.astype(jnp.float32) * scale[None, :]
+    scores = q @ Df.T
+    return jax.lax.top_k(scores, k)
+
+
+def chatty_search(D: jax.Array, q: jax.Array, k: int = 10):
+    """Host callback inside the hot path: every dispatch synchronises the
+    device behind the host print."""
+    scores = q @ D.T
+    jax.debug.print("scores ready: {}", scores.shape[0])
+    return jax.lax.top_k(scores, k)
+
+
+def two_dispatch_search(D: jax.Array, q: jax.Array, k: int = 10):
+    """Fusion breaker: the scoring and the selection are dispatched as two
+    separate jits, so the n-length score vector round-trips through HBM
+    between them."""
+    score = jax.jit(lambda d, x: x @ d.T)
+    select = jax.jit(functools.partial(jax.lax.top_k, k=k))
+    return select(score(D, q))
+
+
+class RecompilingSearcher:
+    """Recompile bomb: the live row count is a STATIC jit argument, so
+    every distinct count compiles a fresh executable — exactly what the
+    recompile-stability lint drives a sweep to catch."""
+
+    def __init__(self, D: jax.Array):
+        self.D = D
+        self._fn = jax.jit(self._search, static_argnames=("n_valid",))
+
+    @staticmethod
+    def _search(D, q, *, n_valid: int):
+        scores = q @ D.T
+        ids = jnp.arange(scores.shape[-1])
+        scores = jnp.where(ids[None, :] < n_valid, scores, -jnp.inf)
+        return jax.lax.top_k(scores, 5)
+
+    def search(self, q: jax.Array, n_valid: int):
+        return self._fn(self.D, q, n_valid=n_valid)
+
+    def cache_sizes(self) -> dict:
+        return {"RecompilingSearcher._search": self._fn._cache_size()}

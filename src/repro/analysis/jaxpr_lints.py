@@ -1,0 +1,312 @@
+"""Jaxpr invariant lints over the serving entry points.
+
+Each serving dispatch path is traced (``jax.make_jaxpr`` — no device
+execution, no traffic) on a tiny synthetic corpus shaped to exercise the
+invariant, and the resulting jaxpr is walked statically:
+
+  * **fused-dispatch** — the top level of a traced entry point must contain
+    exactly the expected number of *compute dispatches* (pjit eqns whose
+    inner jaxpr does real work: dot_general / scan / top_k / pallas_call /
+    collectives). ``DenseIndex.search_projected`` and
+    ``ShardedDenseIndex.search_projected`` must be ONE; a
+    ``SegmentedIndex`` is one projection + one per segment + one merge by
+    design. A stray extra dispatch (a projection that escaped the jit, a
+    device round-trip) is the regression this lint exists to catch.
+  * **storage-dtype streaming** — with an int8/bf16 index, no
+    ``convert_element_type`` may upcast an operand larger than one scan
+    strip (the in-register dequant unit), and the array handed to
+    ``pallas_call`` must keep the storage dtype: the whole bandwidth win
+    is streaming n·m·1 bytes, not a 4x fp32 shadow copy.
+  * **no host callbacks** — ``pure_callback``/``io_callback``/debug
+    prints/infeed inside the traced hot path serialise the device behind
+    the host; none may appear anywhere in the trace.
+  * **jit-cache stability** — dispatching the segmented search across a
+    sweep of delta live-counts and id offsets must not grow any jit cache
+    (``segment_jit_cache_sizes``): live-count and offset are traced
+    operands by contract, so an append never recompiles.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import Finding
+
+# primitives that mark a pjit eqn as a real compute dispatch (vs a trivial
+# jnp wrapper like atleast_2d, which also traces as a named pjit)
+_COMPUTE_PRIMS = frozenset({
+    "dot_general", "scan", "while", "pallas_call", "top_k", "sort",
+    "all_gather", "all_reduce", "psum", "reduce_sum", "reduce_max",
+    "argmax", "shard_map",
+})
+_DISPATCH_PRIMS = frozenset({"pjit", "xla_call", "pallas_call"})
+# host round-trips that must never appear inside a traced hot path
+_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "debug_print",
+    "host_callback", "outside_call", "infeed", "outfeed",
+})
+_WIDTH = {"int8": 1, "bfloat16": 2, "float16": 2, "float32": 4,
+          "float64": 8}
+
+
+def iter_all_eqns(jaxpr) -> Iterable:
+    """Every eqn of ``jaxpr`` and (recursively) of every sub-jaxpr in eqn
+    params — scan bodies, cond branches, pjit/pallas inner jaxprs."""
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        yield from j.eqns
+        stack.extend(jax.core.subjaxprs(j))
+
+
+def _contains_compute(eqn) -> bool:
+    if eqn.primitive.name == "pallas_call":
+        return True
+    for j in _eqn_subjaxprs(eqn):
+        for sub in _walk(j):
+            for e in sub.eqns:
+                if e.primitive.name in _COMPUTE_PRIMS:
+                    return True
+    return False
+
+
+def _eqn_subjaxprs(eqn):
+    for v in eqn.params.values():
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, jax.core.ClosedJaxpr):
+                    yield x.jaxpr
+                elif isinstance(x, jax.core.Jaxpr):
+                    yield x
+
+
+def _walk(jaxpr):
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        yield j
+        stack.extend(jax.core.subjaxprs(j))
+
+
+def compute_dispatches(fn: Callable, *args) -> list:
+    """Top-level compute-dispatch eqns of ``fn`` traced on ``args``."""
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name not in _DISPATCH_PRIMS:
+            continue
+        if _contains_compute(eqn):
+            out.append(eqn)
+    return out
+
+
+def dispatch_name(eqn) -> str:
+    name = eqn.params.get("name")
+    return str(name) if name else eqn.primitive.name
+
+
+def check_dispatch_count(label: str, fn: Callable, args: Sequence,
+                         expected: int) -> list[Finding]:
+    got = compute_dispatches(fn, *args)
+    if len(got) == expected:
+        return []
+    names = [dispatch_name(e) for e in got]
+    return [Finding(
+        check="jaxpr.extra-dispatch", where=label,
+        message=(f"{label}: {len(got)} compute dispatches on the hot path "
+                 f"({names}), contract says exactly {expected} — a "
+                 f"projection or merge escaped the fused jit"))]
+
+
+def check_storage_dtype_stream(label: str, fn: Callable, args: Sequence,
+                               corpus_shape: tuple[int, int],
+                               storage_dtype: str,
+                               strip_rows: int) -> list[Finding]:
+    """No upcast larger than ONE scan strip anywhere in the trace; pallas
+    operands keep the storage dtype.
+
+    Per-strip upcasts (the in-register dequant, ``strip_rows`` × m) are the
+    design; anything strictly larger is a shadow copy of multiple strips —
+    in the limit the whole corpus — and defeats the storage-dtype
+    streaming win. Callers must trace a config whose strip is smaller than
+    the corpus, or the check is vacuous by construction."""
+    findings: list[Finding] = []
+    width = _WIDTH.get(storage_dtype)
+    if width is None or width >= 4:
+        return findings          # f32 storage: nothing to shadow-copy
+    n, m = corpus_shape
+    corpus_elems = n * m
+    strip_elems = min(strip_rows, n) * m
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    for eqn in iter_all_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            (src,), (dst,) = eqn.invars, eqn.outvars
+            src_elems = int(np.prod(src.aval.shape)) if src.aval.shape else 1
+            if (str(src.aval.dtype) == storage_dtype
+                    and src_elems > strip_elems
+                    and _WIDTH.get(str(dst.aval.dtype), 8) > width):
+                findings.append(Finding(
+                    check="jaxpr.upcast", where=f"{label}:{src.aval.shape}",
+                    message=(f"{label}: convert_element_type upcasts a "
+                             f"{storage_dtype} operand "
+                             f"{tuple(src.aval.shape)} (> one "
+                             f"{strip_rows}-row strip) to "
+                             f"{dst.aval.dtype} — a multi-strip shadow "
+                             f"copy defeats storage-dtype streaming")))
+        elif name == "pallas_call":
+            dtypes = {str(v.aval.dtype) for v in eqn.invars}
+            if storage_dtype not in dtypes:
+                findings.append(Finding(
+                    check="jaxpr.upcast", where=f"{label}:pallas_call",
+                    message=(f"{label}: no {storage_dtype} operand reaches "
+                             f"pallas_call (got {sorted(dtypes)}) — the "
+                             f"index was upcast before the kernel instead "
+                             f"of dequantising in-register")))
+            for v in eqn.invars:
+                if (str(v.aval.dtype) not in (storage_dtype,)
+                        and int(np.prod(v.aval.shape or (1,)))
+                        >= corpus_elems):
+                    findings.append(Finding(
+                        check="jaxpr.upcast",
+                        where=f"{label}:pallas_call:{v.aval.shape}",
+                        message=(f"{label}: corpus-sized "
+                                 f"{v.aval.dtype} operand "
+                                 f"{tuple(v.aval.shape)} handed to "
+                                 f"pallas_call alongside the "
+                                 f"{storage_dtype} index")))
+    return findings
+
+
+def check_no_callbacks(label: str, fn: Callable, args: Sequence
+                       ) -> list[Finding]:
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    hits = sorted({e.primitive.name for e in iter_all_eqns(jaxpr)
+                   if e.primitive.name in _CALLBACK_PRIMS})
+    return [Finding(
+        check="jaxpr.host-callback", where=f"{label}:{h}",
+        message=(f"{label}: host callback primitive '{h}' inside the "
+                 f"traced hot path — every dispatch would synchronise the "
+                 f"device behind the host")) for h in hits]
+
+
+def check_recompile_stability(dispatch: Callable[[int, int], None],
+                              cache_sizes: Callable[[], dict],
+                              sweep: Sequence[tuple[int, int]],
+                              label: str) -> list[Finding]:
+    """Drive ``dispatch(live_count, offset)`` across ``sweep`` after one
+    warmup call; any jit-cache growth means a cache key depends on a value
+    that must stay a traced operand."""
+    lo, off = sweep[0]
+    dispatch(lo, off)                       # warmup compiles once
+    before = cache_sizes()
+    for live, offset in sweep[1:]:
+        dispatch(live, offset)
+    after = cache_sizes()
+    grew = {name: (before.get(name, 0), n) for name, n in after.items()
+            if n > before.get(name, 0)}
+    return [Finding(
+        check="jaxpr.recompile", where=f"{label}:{name}",
+        message=(f"{label}: jit cache of '{name}' grew {b} -> {a} across a "
+                 f"live-count/offset sweep — a segment quantity leaked "
+                 f"into a static cache key, so appends recompile under "
+                 f"live traffic")) for name, (b, a) in sorted(grew.items())]
+
+
+# ---------------------------------------------------------------------------
+# The repo's real entry points, on tiny traced corpora
+# ---------------------------------------------------------------------------
+
+
+def _tiny(n=600, d=32, B=4, seed=0):
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    Q = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+    return D, Q
+
+
+def run() -> list[Finding]:
+    """Lint every serving entry point; returns the combined findings."""
+    from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
+    from repro.core.index import (SegmentedIndex, segment_jit_cache_sizes)
+    from repro.core.pca import transform
+
+    findings: list[Finding] = []
+    D, Q = _tiny()
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    W, mean = pruner.projection()
+    n, m = Dh.shape
+
+    # -- dense: fused path is ONE dispatch, streams storage dtype ----------
+    for quant, backend, block in ((False, "jnp", None), (True, "jnp", 128),
+                                  (True, "pallas", 128)):
+        idx = DenseIndex.build(Dh, quantize_int8=quant, backend=backend)
+        label = f"DenseIndex.search_projected[{backend}" \
+                f"{',int8' if quant else ''}]"
+        entry = (lambda i: lambda q: i.search_projected(
+            q, W, k=10, mean=mean, block=block))(idx)
+        findings += check_dispatch_count(label, entry, (Q,), expected=1)
+        findings += check_no_callbacks(label, entry, (Q,))
+        if quant:
+            findings += check_storage_dtype_stream(
+                label, entry, (Q,), (n, m), str(idx.vectors.dtype),
+                strip_rows=block)
+
+    # -- sharded: one dispatch wrapping shard_map + merge ------------------
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    for quant in (False, True):
+        sidx = ShardedDenseIndex.build(Dh, mesh, quantize_int8=quant)
+        label = f"ShardedDenseIndex.search_projected" \
+                f"[{'int8' if quant else 'f32'}]"
+        entry = (lambda i: lambda q: i.search_projected(
+            q, W, k=10, mean=mean, block=128))(sidx)
+        findings += check_dispatch_count(label, entry, (Q,), expected=1)
+        findings += check_no_callbacks(label, entry, (Q,))
+        if quant:
+            findings += check_storage_dtype_stream(
+                label, entry, (Q,), (n, m), str(sidx.vectors.dtype),
+                strip_rows=128)
+
+    # -- segmented: projection + base + one per delta + merge --------------
+    rng = np.random.default_rng(3)
+    seg = SegmentedIndex.from_index(DenseIndex.build(Dh, quantize_int8=True),
+                                    delta_capacity=64)
+    seg = seg.append(rng.standard_normal((70, m)).astype(np.float32))
+    nd = len(seg.deltas)
+    label = f"SegmentedIndex.search_projected[int8,{nd}d]"
+    entry = lambda q: seg.search_projected(q, W, k=10, mean=mean)  # noqa: E731
+    findings += check_dispatch_count(label, entry, (Q,), expected=nd + 3)
+    findings += check_no_callbacks(label, entry, (Q,))
+    # (storage-dtype streaming of the base is covered by the dense/sharded
+    # checks above; deltas upcast their whole small capacity by design)
+
+    # -- compaction streaming: the per-block projection is one dispatch ----
+    label = "pca.transform[compaction-block]"
+    block = jnp.asarray(rng.standard_normal((64, D.shape[1]))
+                        .astype(np.float32))
+    entry = lambda b: transform(b, pruner.state, pruner.kept_dims)  # noqa: E731
+    findings += check_no_callbacks(label, entry, (block,))
+
+    # -- recompile stability across live-counts/offsets --------------------
+    state = {"seg": seg}
+
+    def dispatch(live_rows: int, _offset: int) -> None:
+        state["seg"] = state["seg"].append(
+            rng.standard_normal((live_rows, m)).astype(np.float32))
+        state["seg"].search_projected(Q, W, k=5, mean=mean)
+
+    # stays within the open delta's capacity: every step changes the live
+    # count and the next segment's id offset but must reuse every jit
+    sweep = [(1, 0), (2, 0), (3, 0), (5, 0), (1, 0)]
+    findings += check_recompile_stability(
+        dispatch, segment_jit_cache_sizes, sweep,
+        "SegmentedIndex.append+search_projected")
+    return findings

@@ -1,0 +1,306 @@
+"""Static VMEM/grid budget checker for the repo's Pallas kernels.
+
+TPU cores have ~16 MiB of VMEM; a ``pallas_call`` whose resident working
+set exceeds it fails at *compile* time on hardware — but this repo's CI
+runs the kernels in interpret mode, where any geometry "works". This
+checker closes that gap statically, with no TPU and no execution:
+
+  * **VMEM estimate** — resident bytes for a ``topk_score_pallas`` /
+    ``pca_project`` config, derived from the kernels' own shared geometry
+    helpers (``topk_geometry`` / ``project_geometry``), so the checker
+    prices exactly the dispatch the wrapper would launch: streamed inputs
+    double-buffered, outputs double-buffered, scratch and the kernel's
+    in-register intermediates single-buffered.
+  * **grid/padding invariants** — the clamp/pad/fold arithmetic must tile
+    exactly (no dropped or double-visited rows): ``nblocks·block_n =
+    n + pad_rows`` with ``pad_rows < block_n``, batch and fold likewise.
+  * **traced index-map bounds** — best-effort introspection of the traced
+    ``pallas_call``: every BlockSpec index map is evaluated at the grid
+    corners and the resulting block windows must lie inside the (padded)
+    operand. Guarded per JAX version; introspection failure degrades to a
+    warn, never a crash.
+  * **alignment warnings** — lane (128) / sublane (8) misalignment wastes
+    VMEM and MXU occupancy without being wrong; reported at warn severity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.analysis import Finding
+from repro.analysis.jaxpr_lints import iter_all_eqns
+from repro.kernels.pca_project import project_geometry
+from repro.kernels.topk_score import TopKGeometry, topk_geometry
+
+#: per-core VMEM on current TPU generations; the checker budget defaults to
+#: this minus a safety margin for compiler-managed temporaries.
+VMEM_PER_CORE = 16 * 2 ** 20
+DEFAULT_BUDGET = int(VMEM_PER_CORE * 0.9)
+
+_WIDTH = {"int8": 1, "bfloat16": 2, "float16": 2, "float32": 4,
+          "int32": 4, "float64": 8}
+
+LANE = 128
+SUBLANE = 8
+
+
+def _width(dtype: str) -> int:
+    return _WIDTH.get(str(dtype), 4)
+
+
+def estimate_topk_vmem(g: TopKGeometry, dtype: str) -> dict[str, int]:
+    """Resident-bytes breakdown of one ``topk_score_pallas`` dispatch.
+
+    Inputs/outputs are priced double-buffered (the Pallas pipeline keeps
+    the next block in flight while the kernel runs on the current one);
+    scratch is persistent single-buffered; the kernel's largest live
+    intermediates — the (block_b, block_n) f32 score strip, its int32 id
+    strip, the fold buffers and the (k + fold_w) candidate rows — are
+    priced once.
+    """
+    w = _width(dtype)
+    q_tile = 2 * g.block_b * g.m * 4                  # f32 query tile
+    d_strip = 2 * g.block_n * g.m * w                 # storage-dtype strip
+    outs = 2 * g.block_b * g.k * (4 + 4)              # scores + ids
+    scratch = g.block_b * g.k * (4 + 4)               # running top-k
+    scores = g.block_b * g.block_n * 4                # S_blk f32
+    gids = g.block_b * g.block_n * 4                  # iota int32
+    dequant = g.block_n * g.m * 4 if w < 4 else 0     # in-register upcast
+    fold = g.block_b * g.fold_r * g.fold_w * (4 + 4)  # fs + fi
+    cand = g.block_b * (g.k + g.fold_w) * (4 + 4)     # merge buffer
+    parts = dict(q_tile=q_tile, d_strip=d_strip, dequant=dequant,
+                 scores=scores, gids=gids, fold=fold, cand=cand,
+                 scratch=scratch, outputs=outs)
+    parts["total"] = sum(parts.values())
+    return parts
+
+
+def estimate_project_vmem(n: int, d: int, m: int, *, block_rows: int,
+                          in_dtype: str = "float32",
+                          out_dtype: str = "float32") -> dict[str, int]:
+    """Resident-bytes breakdown of one ``pca_project`` dispatch: the
+    VMEM-resident ``W``, a double-buffered input strip, the f32 accumulator
+    and the double-buffered output strip (+ the broadcast scale row when
+    the quant epilogue is fused)."""
+    block_rows, _, _ = project_geometry(n, block_rows)
+    parts = dict(
+        w_resident=d * m * 4,
+        x_strip=2 * block_rows * d * _width(in_dtype),
+        accum=block_rows * m * 4,
+        out_strip=2 * block_rows * m * _width(out_dtype),
+        scale=m * 4 if out_dtype == "int8" else 0,
+    )
+    parts["total"] = sum(parts.values())
+    return parts
+
+
+def check_topk_config(n: int, m: int, B: int, k: int, *,
+                      block_n: int = 1024, block_b: int = 128,
+                      dtype: str = "float32",
+                      budget: int = DEFAULT_BUDGET) -> list[Finding]:
+    """Budget + tiling-invariant findings for one top-k scan config."""
+    g = topk_geometry(n, m, B, k, block_n=block_n, block_b=block_b)
+    label = (f"topk_score[m={m},k={k},bn={g.block_n},bb={g.block_b},"
+             f"{dtype}]")
+    findings: list[Finding] = []
+
+    est = estimate_topk_vmem(g, dtype)
+    if est["total"] > budget:
+        top = sorted((v, c) for c, v in est.items() if c != "total")[-2:]
+        hot = ", ".join(f"{c}={v // 1024}KiB" for v, c in reversed(top))
+        findings.append(Finding(
+            check="pallas.vmem-budget", where=label,
+            message=(f"{label}: resident VMEM estimate "
+                     f"{est['total'] / 2 ** 20:.1f} MiB exceeds the "
+                     f"{budget / 2 ** 20:.1f} MiB budget ({hot}) — this "
+                     f"config compiles in interpret mode but cannot "
+                     f"launch on a real core")))
+
+    # tiling must cover every row exactly once
+    bad = []
+    if g.nblocks * g.block_n != g.n + g.pad_rows or g.pad_rows >= g.block_n:
+        bad.append(f"index strips: {g.nblocks}x{g.block_n} vs n={g.n}"
+                   f"+pad{g.pad_rows}")
+    if g.nbt * g.block_b != g.b_pad or g.b_pad < g.B:
+        bad.append(f"batch tiles: {g.nbt}x{g.block_b} vs B={g.B}"
+                   f" pad->{g.b_pad}")
+    if g.fold_r * g.fold_w != g.block_n + g.pad_w or g.pad_w >= g.fold_w:
+        bad.append(f"fold: {g.fold_r}x{g.fold_w} vs block_n={g.block_n}"
+                   f"+pad{g.pad_w}")
+    # (fold_w < k is fine: a strip smaller than k contributes what it has;
+    # the running-list merge keeps earlier strips' survivors)
+    for b in bad:
+        findings.append(Finding(
+            check="pallas.grid", where=f"{label}:{b.split(':')[0]}",
+            message=(f"{label}: tiling invariant violated — {b}; rows "
+                     f"would be dropped or double-visited")))
+
+    if g.fold_w % LANE:
+        findings.append(Finding(
+            check="pallas.alignment", where=f"{label}:fold_w",
+            severity="warn",
+            message=(f"{label}: fold_w={g.fold_w} is not lane-aligned "
+                     f"({LANE}); cross-lane reductions pad internally")))
+    if g.block_b % SUBLANE and g.block_b != g.B:
+        findings.append(Finding(
+            check="pallas.alignment", where=f"{label}:block_b",
+            severity="warn",
+            message=(f"{label}: block_b={g.block_b} is not sublane-aligned "
+                     f"({SUBLANE}); the query tile pads internally")))
+    return findings
+
+
+def check_project_config(n: int, d: int, m: int, *, block_rows: int = 1024,
+                         quant: bool = False,
+                         budget: int = DEFAULT_BUDGET) -> list[Finding]:
+    label = (f"pca_project[d={d},m={m},rows={block_rows}"
+             f"{',int8' if quant else ''}]")
+    est = estimate_project_vmem(n, d, m, block_rows=block_rows,
+                                out_dtype="int8" if quant else "float32")
+    findings: list[Finding] = []
+    if est["total"] > budget:
+        findings.append(Finding(
+            check="pallas.vmem-budget", where=label,
+            message=(f"{label}: resident VMEM estimate "
+                     f"{est['total'] / 2 ** 20:.1f} MiB exceeds the "
+                     f"{budget / 2 ** 20:.1f} MiB budget — shrink "
+                     f"block_rows or m")))
+    br, nblocks, pad = project_geometry(n, block_rows)
+    if nblocks * br != n + pad or pad >= br:
+        findings.append(Finding(
+            check="pallas.grid", where=f"{label}:rows",
+            message=(f"{label}: tiling invariant violated — {nblocks}x{br} "
+                     f"vs n={n}+pad{pad}")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Traced index-map bounds (best-effort, JAX-version-sensitive)
+# ---------------------------------------------------------------------------
+
+
+def _grid_corners(grid: Sequence[int]):
+    """All 2^len(grid) corner index tuples (first/last step per dim)."""
+    corners = [()]
+    for size in grid:
+        ends = (0,) if size <= 1 else (0, size - 1)
+        corners = [c + (e,) for c in corners for e in ends]
+    return corners
+
+
+def check_traced_index_maps(label: str, fn: Callable, args: Sequence
+                            ) -> list[Finding]:
+    """Trace ``fn``, locate its ``pallas_call`` eqns and evaluate every
+    BlockSpec index map at the grid corners: each block window must lie
+    inside its (padded) operand. Introspection details vary across JAX
+    versions, so any failure to introspect degrades to a warn finding
+    rather than an error or a crash."""
+    findings: list[Finding] = []
+    try:
+        jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+        calls = [e for e in iter_all_eqns(jaxpr)
+                 if e.primitive.name == "pallas_call"]
+        if not calls:
+            return [Finding(
+                check="pallas.index-map", where=f"{label}:no-pallas-call",
+                severity="warn",
+                message=f"{label}: traced entry contains no pallas_call")]
+        for eqn in calls:
+            gm = eqn.params["grid_mapping"]
+            grid = tuple(int(s) for s in gm.grid)
+            operands = list(eqn.invars) + list(eqn.outvars)
+            mappings = list(gm.block_mappings)
+            # index/scalar-prefetch operands precede the mapped ones
+            operands = operands[len(operands) - len(mappings):] \
+                if len(operands) >= len(mappings) else operands
+            for bm, var in zip(mappings, operands):
+                shape = tuple(var.aval.shape)
+                block = tuple(bm.block_shape)
+                imap = bm.index_map_jaxpr
+                for corner in _grid_corners(grid):
+                    idx = jax.core.eval_jaxpr(
+                        imap.jaxpr, imap.consts,
+                        *(np.int32(c) for c in corner))
+                    for ax, (bi, bs) in enumerate(zip(idx, block)):
+                        if bs is None or not isinstance(bs, int):
+                            continue
+                        start = int(bi) * bs
+                        if start < 0 or start + bs > shape[ax]:
+                            findings.append(Finding(
+                                check="pallas.index-map",
+                                where=f"{label}:axis{ax}",
+                                message=(
+                                    f"{label}: index map sends grid "
+                                    f"{corner} to block start {start} "
+                                    f"(+{bs}) outside operand dim "
+                                    f"{shape[ax]} on axis {ax} — "
+                                    f"out-of-bounds window")))
+    except Exception as exc:  # noqa: BLE001 — version-sensitive introspection
+        findings.append(Finding(
+            check="pallas.index-map", where=f"{label}:introspection",
+            severity="warn",
+            message=(f"{label}: pallas_call introspection unavailable on "
+                     f"this JAX version ({type(exc).__name__}: {exc})")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# The repo's real kernel configs
+# ---------------------------------------------------------------------------
+
+#: (n, m, B, k, block_n, block_b, dtype) — the serving configs BENCH_perf
+#: exercises plus the defaults the wrappers ship with.
+SERVING_TOPK_CONFIGS = (
+    (1_000_000, 128, 128, 10, 1024, 128, "int8"),
+    (1_000_000, 128, 128, 10, 1024, 128, "float32"),
+    (1_000_000, 256, 64, 100, 1024, 128, "float32"),
+    # bn=4096 at k=100 busts the budget (14.9 MiB: fold + dequant strips);
+    # 2048 is the largest power-of-two strip that fits with headroom
+    (10_000_000, 256, 256, 100, 2048, 128, "int8"),
+)
+
+SERVING_PROJECT_CONFIGS = (
+    (1_000_000, 1024, 256, 1024, False),
+    (1_000_000, 1024, 256, 1024, True),
+    (1_000_000, 768, 128, 2048, True),
+)
+
+
+def run(budget: int = DEFAULT_BUDGET) -> list[Finding]:
+    """Budget-check the repo's shipped kernel configs and bounds-check the
+    traced dispatches."""
+    from repro.kernels.pca_project import (pca_project_pallas,
+                                           pca_project_quant_pallas)
+    from repro.kernels.topk_score import topk_score_pallas
+
+    findings: list[Finding] = []
+    for n, m, B, k, bn, bb, dt in SERVING_TOPK_CONFIGS:
+        findings += check_topk_config(n, m, B, k, block_n=bn, block_b=bb,
+                                      dtype=dt, budget=budget)
+    for n, d, m, rows, quant in SERVING_PROJECT_CONFIGS:
+        findings += check_project_config(n, d, m, block_rows=rows,
+                                         quant=quant, budget=budget)
+
+    # traced bounds on representative tiny dispatches (nontrivial padding:
+    # 600 % 128 != 0 exercises the pad window at the last grid step)
+    rng = np.random.default_rng(0)
+    D = rng.standard_normal((600, 128)).astype(np.float32)
+    Q = rng.standard_normal((4, 128)).astype(np.float32)
+    findings += check_traced_index_maps(
+        "topk_score_pallas[600x128]",
+        functools.partial(topk_score_pallas, k=10, block_n=128, block_b=8),
+        (D, Q))
+    X = rng.standard_normal((600, 64)).astype(np.float32)
+    W = rng.standard_normal((64, 32)).astype(np.float32)
+    findings += check_traced_index_maps(
+        "pca_project_pallas[600x64->32]",
+        functools.partial(pca_project_pallas, block_rows=128), (X, W))
+    scale = np.full((32,), 0.1, np.float32)
+    findings += check_traced_index_maps(
+        "pca_project_quant_pallas[600x64->32]",
+        functools.partial(pca_project_quant_pallas, block_rows=128),
+        (X, W, scale))
+    return findings

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Iterator
 
-import jax
 from jax.sharding import Mesh
 
 from repro.configs import (arctic_480b, autoint, biencoder_msmarco, deepfm,

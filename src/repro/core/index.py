@@ -304,6 +304,29 @@ class DenseIndex:
                                        self.backend)
 
 
+def _addressable_shard_ranges(sharding, shape: tuple[int, int], n: int
+                              ) -> list[tuple]:
+    """Row ranges of the shards THIS PROCESS must materialise.
+
+    One ``(device, start, stop, lo, hi)`` tuple per shard in
+    ``sharding.addressable_devices_indices_map`` — i.e. per local device
+    only, so a multi-host load reads 1/num_hosts of the store and never
+    touches rows another process owns. ``[start, stop)`` is the shard's
+    padded-global row window; ``[lo, hi)`` is its clamp to the ``n`` real
+    rows (a shard may be partly — or, when ``n < (ndev-1)·rows_per``,
+    entirely — device padding the caller synthesises as zeros).
+    """
+    n_padded = shape[0]
+    out = []
+    for device, index in sharding.addressable_devices_indices_map(
+            shape).items():
+        rows = index[0]
+        start = rows.start or 0
+        stop = rows.stop if rows.stop is not None else n_padded
+        out.append((device, start, stop, min(start, n), min(stop, n)))
+    return out
+
+
 @dataclasses.dataclass
 class ShardedDenseIndex:
     """Index with rows sharded across every device of a mesh.
@@ -380,12 +403,8 @@ class ShardedDenseIndex:
         sharding = NamedSharding(mesh, P(axes, None))
         shape = (n_padded, m)
         shards = []
-        for device, index in sharding.addressable_devices_indices_map(shape).items():
-            rows = index[0]
-            start, stop = rows.start or 0, rows.stop if rows.stop is not None else n_padded
-            # clamp to the real rows: a shard may be partly — or, when
-            # n < (ndev-1)·rows_per, entirely — device padding
-            lo, hi = min(start, n), min(stop, n)
+        for device, start, stop, lo, hi in _addressable_shard_ranges(
+                sharding, shape, n):
             local = store.read_rows(lo, hi)
             if stop - start > hi - lo:   # synthesise this shard's padding rows
                 local = np.concatenate(
@@ -416,21 +435,24 @@ class ShardedDenseIndex:
         return b
 
     def search(self, queries: jax.Array, k: int = 10,
-               merge: Merge | None = None) -> tuple[jax.Array, jax.Array]:
+               merge: Merge | None = None,
+               block: int | None = None) -> tuple[jax.Array, jax.Array]:
         q = jnp.atleast_2d(queries).astype(jnp.float32)
         if self.scale is not None:
             q = q * self.scale[None, :]
         k = min(k, self.n)
         merge = self.merge if merge is None else merge
-        key = (q.shape[0], k, merge)
+        key = (q.shape[0], k, merge, block)
         fn = self._jit_cache.get(key)
         if fn is None:
-            fn = self._jit_cache[key] = jax.jit(self._search_fn(k, merge))
+            fn = self._jit_cache[key] = jax.jit(
+                self._search_fn(k, merge, block))
         return fn(self.vectors, q)
 
     def search_projected(self, queries: jax.Array, components: jax.Array,
                          k: int = 10, *, mean: jax.Array | None = None,
-                         merge: Merge | None = None
+                         merge: Merge | None = None,
+                         block: int | None = None
                          ) -> tuple[jax.Array, jax.Array]:
         """Fused raw-query search over the sharded index (one dispatch).
 
@@ -443,11 +465,11 @@ class ShardedDenseIndex:
         q = jnp.atleast_2d(queries)
         k = min(k, self.n)
         merge = self.merge if merge is None else merge
-        key = ("projected", q.shape[0], q.shape[1], k, merge,
+        key = ("projected", q.shape[0], q.shape[1], k, merge, block,
                self.scale is not None, mean is not None)
         fn = self._jit_cache.get(key)
         if fn is None:
-            search = self._search_fn(k, merge)
+            search = self._search_fn(k, merge, block)
 
             def projected(vectors, W, scale, mean_, q_):
                 return search(vectors,
@@ -456,7 +478,7 @@ class ShardedDenseIndex:
             fn = self._jit_cache[key] = jax.jit(projected)
         return fn(self.vectors, jnp.asarray(components), self.scale, mean, q)
 
-    def _search_fn(self, k: int, merge: Merge):
+    def _search_fn(self, k: int, merge: Merge, block: int | None = None):
         axes = tuple(self.mesh.axis_names)
         n_real = self.n
         ndev = int(np.prod(self.mesh.devices.shape))
@@ -481,9 +503,15 @@ class ShardedDenseIndex:
             base = idx * rows_per
             if backend == "pallas":
                 from repro.kernels import ops as kops
-                s, ids = kops.topk_score(D_local, q_rep, k=kp)
+                if block is None:
+                    s, ids = kops.topk_score(D_local, q_rep, k=kp)
+                else:
+                    s, ids = kops.topk_score(D_local, q_rep, k=kp,
+                                             block_n=block)
             else:
-                s, ids = _scan_topk(D_local, q_rep, kp, vma_axes=axes)
+                s, ids = _scan_topk(D_local, q_rep, kp,
+                                    block=65536 if block is None else block,
+                                    vma_axes=axes)
             ids = jnp.where(ids >= 0, ids + base, -1)
             padded = ids >= n_real
             s = jnp.where(padded, -jnp.inf, s)

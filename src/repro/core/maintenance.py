@@ -44,6 +44,25 @@ from repro.core.index import DenseIndex, SegmentedIndex, ShardedDenseIndex
 from repro.core.pruning import StaticPruner
 
 
+def _eigval_energy(pruner: StaticPruner) -> float:
+    """Reference captured energy from the fitted state alone.
+
+    ``captured_energy`` is an *uncentered* ratio. Uncentered fit:
+    ``||D W_m||²/||D||² = Σ_{i≤m} λ_i / Σ λ_i`` (mean is zeros, the
+    correction terms vanish). Centered fit: the Gram is ``n·(C + μμᵀ)``,
+    so the same ratio gains the mean's energy —
+    ``(Σ_{i≤m} λ_i + ||W_mᵀμ||²) / (Σ λ_i + ||μ||²)``. Both exact.
+    """
+    state = pruner.state
+    m = pruner.kept_dims
+    lam = np.asarray(state.eigenvalues, np.float64)
+    mu = np.asarray(state.mean, np.float64)
+    W = np.asarray(state.components, np.float64)[:, :m]
+    num = float(lam[:m].sum()) + float(np.sum((W.T @ mu) ** 2))
+    den = float(lam.sum()) + float(np.sum(mu ** 2))
+    return num / max(den, 1e-30)
+
+
 def captured_energy(X: jax.Array, pruner: StaticPruner) -> float:
     """||X W_m||^2 / ||X||^2 — energy the kept subspace explains on X."""
     W = pruner.state.components[:, :pruner.kept_dims]
@@ -143,7 +162,11 @@ class IndexUpdater:
         (requantised from the exact f32 staging — the rewrite is bounded by
         the open delta's capacity). Returns the number of rows appended.
         """
-        pruned = np.asarray(self.pruner.prune_index(new_embs), np.float32)
+        with self._lock:
+            pruner = self.pruner
+        # the rotation runs OUTSIDE the lock (device work must not block
+        # concurrent telemetry); the append below re-takes it
+        pruned = np.asarray(pruner.prune_index(new_embs), np.float32)
         with self._lock:
             new_index, ops = self.index.append_with_ops(pruned)
             self._mirror_ops(ops, new_index)
@@ -189,19 +212,23 @@ class IndexUpdater:
     @property
     def delta_fraction(self) -> float:
         """Fraction of the corpus living outside the compacted base."""
-        n = self.index.n
-        return self.index.delta_rows / n if n else 0.0
+        with self._lock:
+            index = self.index
+        n = index.n
+        return index.delta_rows / n if n else 0.0
 
     def scale_divergence(self) -> float:
         """max over deltas of max-dim ratio (delta scale / base scale) —
         how far live data has outgrown the base's quantisation regime.
         1.0 when unquantised or no deltas have widened past the base."""
-        base_scale = self.index.base.scale
-        if base_scale is None or not self.index.deltas:
+        with self._lock:
+            index = self.index
+        base_scale = index.base.scale
+        if base_scale is None or not index.deltas:
             return 1.0
         b = np.asarray(base_scale, np.float64)
         worst = 1.0
-        for d in self.index.deltas:
+        for d in index.deltas:
             if d.scale is not None:
                 worst = max(worst, float(np.max(np.asarray(d.scale,
                                                            np.float64) / b)))
@@ -209,27 +236,26 @@ class IndexUpdater:
 
     # -- drift policy ------------------------------------------------------
     def _reference_energy(self) -> float:
-        if self.fit_energy is None:
-            state = self.pruner.state
-            m = self.pruner.kept_dims
-            lam = np.asarray(state.eigenvalues, np.float64)
-            # captured_energy is an *uncentered* ratio. Uncentered fit:
-            # ||D W_m||²/||D||² = Σ_{i≤m} λ_i / Σ λ_i (mean is zeros, the
-            # correction terms vanish). Centered fit: the Gram is
-            # n·(C + μμᵀ), so the same ratio gains the mean's energy —
-            # (Σ_{i≤m} λ_i + ||W_mᵀμ||²) / (Σ λ_i + ||μ||²). Both exact.
-            mu = np.asarray(state.mean, np.float64)
-            W = np.asarray(state.components, np.float64)[:, :m]
-            num = float(lam[:m].sum()) + float(np.sum((W.T @ mu) ** 2))
-            den = float(lam.sum()) + float(np.sum(mu ** 2))
-            self.fit_energy = num / max(den, 1e-30)
-        return self.fit_energy
+        with self._lock:
+            if self.fit_energy is not None:
+                return self.fit_energy
+            pruner = self.pruner
+        # the device->host transfers inside the eigenvalue identity run
+        # UNLOCKED; only the cache fill re-takes the lock (and discards
+        # the result if a refit swapped the pruner meanwhile)
+        ref = _eigval_energy(pruner)
+        with self._lock:
+            if self.fit_energy is None and self.pruner is pruner:
+                self.fit_energy = ref
+            return self.fit_energy if self.fit_energy is not None else ref
 
     def drift_score(self, new_embs: jax.Array) -> float:
         """1.0 = no drift; < 1.0 = kept subspace explains less energy on the
         new batch than it did on the fit corpus."""
-        return captured_energy(new_embs, self.pruner) / max(
-            self._reference_energy(), 1e-12)
+        with self._lock:
+            pruner = self.pruner
+        ref = self._reference_energy()
+        return captured_energy(new_embs, pruner) / max(ref, 1e-12)
 
     def needs_refit(self, new_embs: jax.Array, threshold: float = 0.9,
                     delta_threshold: float = 0.5,
@@ -246,15 +272,19 @@ class IndexUpdater:
         return self.drift_score(new_embs) < threshold
 
     # -- compaction --------------------------------------------------------
-    def _iter_dequant_rows(self, index: SegmentedIndex, block_rows: int):
+    def _iter_dequant_rows(self, index: SegmentedIndex, block_rows: int,
+                           store) -> "object":
         """Stream base+delta rows as f32 blocks in global id order.
 
-        With a store attached the base streams from DISK (host O(block));
-        otherwise from the device copy. Deltas stream from their exact f32
-        staging either way.
+        ``store`` is the caller's locked snapshot of ``self.store`` (or
+        None): the generator runs unlocked while appends mirror to the
+        live store, so it must never re-read the field mid-stream. With a
+        store the base streams from DISK (host O(block)); otherwise from
+        the device copy. Deltas stream from their exact f32 staging either
+        way.
         """
-        if self.store is not None:
-            base_view = self.store.segments()[0]
+        if store is not None:
+            base_view = store.segments()[0]
             scale = base_view.scale()
             for lo in range(0, base_view.n, block_rows):
                 rows = base_view.read_rows(lo, min(lo + block_rows,
@@ -295,19 +325,21 @@ class IndexUpdater:
         Appends racing a background compaction are reconciled: rows landed
         after the snapshot re-append onto the fresh base before the swap.
         """
-        snapshot = self.index
+        with self._lock:
+            snapshot, pruner = self.index, self.pruner
+            store, n_compactions = self.store, self.compactions
         quant = snapshot.quantized
         mesh = getattr(snapshot.base, "mesh", None)
         backend = snapshot.base.backend
-        if self.store is not None:
+        if store is not None:
             from repro.checkpoint.manager import commit_dir
             from repro.core.store import IndexStore
-            side_path = self.store.path + ".compact"
-            side = self.pruner.build_index_to(
+            side_path = store.path + ".compact"
+            side = pruner.build_index_to(
                 side_path,
-                lambda: self._iter_dequant_rows(snapshot, block_rows),
+                lambda: self._iter_dequant_rows(snapshot, block_rows, store),
                 quantize_int8=quant, already_projected=True,
-                meta={"compactions": self.compactions + 1})
+                meta={"compactions": n_compactions + 1})
             # the base's device arrays materialise from the sidecar BEFORE
             # the lock: the expensive load never blocks appends
             if mesh is not None:
@@ -318,7 +350,7 @@ class IndexUpdater:
         else:
             side_path = None
             rows = np.concatenate(
-                list(self._iter_dequant_rows(snapshot, block_rows)))
+                list(self._iter_dequant_rows(snapshot, block_rows, None)))
             if mesh is not None:
                 base = ShardedDenseIndex.build(jnp.asarray(rows), mesh,
                                                quantize_int8=quant,
@@ -361,15 +393,17 @@ class IndexUpdater:
         distribution — unlike ``compact``, this re-fits ``W_m`` itself.
         The base keeps its layout: a sharded base refits onto the same
         mesh/merge/backend instead of collapsing onto one device."""
-        cutoff = self.pruner.effective_cutoff
-        quant = self.index.quantized
-        mesh = getattr(self.index.base, "mesh", None)
-        backend = self.index.base.backend
+        with self._lock:
+            old_index, old_pruner = self.index, self.pruner
+        cutoff = old_pruner.effective_cutoff
+        quant = old_index.quantized
+        mesh = getattr(old_index.base, "mesh", None)
+        backend = old_index.base.backend
         pruner = StaticPruner(cutoff=cutoff).fit(corpus)
         if mesh is not None:
             base = ShardedDenseIndex.build(
                 pruner.prune_index(corpus), mesh, quantize_int8=quant,
-                backend=backend, merge=self.index.base.merge)
+                backend=backend, merge=old_index.base.merge)
         else:
             base = pruner.build_index(corpus, quantize_int8=quant,
                                       backend=backend)
@@ -390,4 +424,6 @@ class IndexUpdater:
                 self.server.swap_index(self.index, pruner=self.pruner)
 
     def search(self, queries: jax.Array, k: int = 10):
-        return self.index.search(self.pruner.transform_queries(queries), k=k)
+        with self._lock:
+            index, pruner = self.index, self.pruner
+        return index.search(pruner.transform_queries(queries), k=k)

@@ -9,7 +9,6 @@ dense array helpers below for synthetic benchmarks.
 """
 from __future__ import annotations
 
-import math
 from typing import Mapping, Sequence
 
 import numpy as np

@@ -25,12 +25,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Iterable, Iterator
+from typing import Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.par import compat
 

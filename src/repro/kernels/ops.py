@@ -7,7 +7,6 @@ Mosaic kernels.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.gram import gram_pallas
 from repro.kernels.pca_project import pca_project_pallas, pca_project_quant_pallas

@@ -23,6 +23,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def project_geometry(n: int, block_rows: int = 1024) -> tuple[int, int, int]:
+    """``(block_rows, nblocks, pad)`` for one projection dispatch — the
+    clamp/padding math shared by both wrappers below and the static budget
+    checker (``repro.analysis.pallas_budget``)."""
+    block_rows = min(block_rows, max(8, n))
+    nblocks = -(-n // block_rows)
+    pad = nblocks * block_rows - n
+    return block_rows, nblocks, pad
+
+
 def _project_kernel(x_ref, w_ref, out_ref):
     out_ref[...] = jax.lax.dot_general(
         x_ref[...], w_ref[...],
@@ -49,9 +59,7 @@ def pca_project_pallas(D: jax.Array, W: jax.Array, *, block_rows: int = 1024,
     n, d = D.shape
     d2, m = W.shape
     assert d == d2
-    block_rows = min(block_rows, max(8, n))
-    nblocks = -(-n // block_rows)
-    pad = nblocks * block_rows - n
+    block_rows, nblocks, pad = project_geometry(n, block_rows)
     Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
     out = pl.pallas_call(
         _project_kernel,
@@ -74,9 +82,7 @@ def pca_project_quant_pallas(D: jax.Array, W: jax.Array, scale: jax.Array, *,
     """``int8(round((D @ W) / scale))`` with the quantisation fused in VMEM."""
     n, d = D.shape
     m = W.shape[1]
-    block_rows = min(block_rows, max(8, n))
-    nblocks = -(-n // block_rows)
-    pad = nblocks * block_rows - n
+    block_rows, nblocks, pad = project_geometry(n, block_rows)
     Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
     out = pl.pallas_call(
         _project_quant_kernel,

@@ -42,6 +42,7 @@ Outputs are sorted descending; ties break toward the smaller doc id
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,53 @@ _BIG = jnp.iinfo(jnp.int32).max
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+class TopKGeometry(NamedTuple):
+    """Grid/padding/fold geometry of one ``topk_score_pallas`` dispatch.
+
+    Single source of truth shared by the kernel wrapper below and the
+    static VMEM/grid budget checker (``repro.analysis.pallas_budget``) —
+    the checker must reject exactly the configs the kernel would launch,
+    so both derive every derived quantity from here.
+    """
+
+    n: int            # corpus rows (pre-padding)
+    m: int            # index width
+    B: int            # query batch (pre-padding)
+    k: int
+    block_n: int      # index strip rows (clamped)
+    block_b: int      # query tile rows (clamped)
+    nblocks: int      # index strips in the grid
+    pad_rows: int     # corpus padding rows appended
+    b_pad: int        # padded batch
+    nbt: int          # batch tiles in the grid
+    fold_w: int       # stage-1 candidate-lane width (~2k, lane-aligned)
+    fold_r: int       # sub-strips folded per lane
+    pad_w: int        # strip padding for the (fold_r, fold_w) reshape
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.nbt, self.nblocks)
+
+
+def topk_geometry(n: int, m: int, B: int, k: int, *, block_n: int = 1024,
+                  block_b: int = 128) -> TopKGeometry:
+    """Clamp/derive the full dispatch geometry for a (n, m) × (B,) call."""
+    block_n = min(block_n, max(8, n))
+    nblocks = -(-n // block_n)
+    pad_rows = nblocks * block_n - n
+    block_b = max(1, min(block_b, _round_up(B, 8)))
+    b_pad = _round_up(B, block_b)
+    nbt = b_pad // block_b
+    # two-stage select geometry: W-wide candidate lanes (~2k, lane-aligned),
+    # R sub-strips folded per lane
+    fold_w = min(block_n, _round_up(2 * k, 128))
+    fold_r = -(-block_n // fold_w)
+    pad_w = fold_r * fold_w - block_n
+    return TopKGeometry(n=n, m=m, B=B, k=k, block_n=block_n, block_b=block_b,
+                        nblocks=nblocks, pad_rows=pad_rows, b_pad=b_pad,
+                        nbt=nbt, fold_w=fold_w, fold_r=fold_r, pad_w=pad_w)
 
 
 def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int,
@@ -148,41 +196,32 @@ def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
     n, m = D.shape
     B = Q.shape[0]
     nv = n if n_valid is None else min(n_valid, n)
-    block_n = min(block_n, max(8, n))
-    nblocks = -(-n // block_n)
-    pad_rows = nblocks * block_n - n
-    if pad_rows:
-        D = jnp.pad(D, ((0, pad_rows), (0, 0)))   # dtype-preserving
+    g = topk_geometry(n, m, B, k, block_n=block_n, block_b=block_b)
+    if g.pad_rows:
+        D = jnp.pad(D, ((0, g.pad_rows), (0, 0)))   # dtype-preserving
     Qf = Q.astype(jnp.float32)
-    block_b = max(1, min(block_b, _round_up(B, 8)))
-    b_pad = _round_up(B, block_b)
-    if b_pad != B:
-        Qf = jnp.pad(Qf, ((0, b_pad - B), (0, 0)))
-    nbt = b_pad // block_b
-    # two-stage select geometry: W-wide candidate lanes (~2k, lane-aligned),
-    # R sub-strips folded per lane
-    fold_w = min(block_n, _round_up(2 * k, 128))
-    fold_r = -(-block_n // fold_w)
+    if g.b_pad != B:
+        Qf = jnp.pad(Qf, ((0, g.b_pad - B), (0, 0)))
 
-    kernel = _make_kernel(k, nv, block_n, nblocks, fold_w, fold_r)
+    kernel = _make_kernel(k, nv, g.block_n, g.nblocks, g.fold_w, g.fold_r)
     out_s, out_i = pl.pallas_call(
         kernel,
-        grid=(nbt, nblocks),
+        grid=g.grid,
         in_specs=[
-            pl.BlockSpec((block_b, m), lambda b, i: (b, 0)),  # Q tile resident
-            pl.BlockSpec((block_n, m), lambda b, i: (i, 0)),  # D strip streams
+            pl.BlockSpec((g.block_b, m), lambda b, i: (b, 0)),  # Q resident
+            pl.BlockSpec((g.block_n, m), lambda b, i: (i, 0)),  # D streams
         ],
         out_specs=[
-            pl.BlockSpec((block_b, k), lambda b, i: (b, 0)),
-            pl.BlockSpec((block_b, k), lambda b, i: (b, 0)),
+            pl.BlockSpec((g.block_b, k), lambda b, i: (b, 0)),
+            pl.BlockSpec((g.block_b, k), lambda b, i: (b, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
-            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+            jax.ShapeDtypeStruct((g.b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((g.b_pad, k), jnp.int32),
         ],
         scratch_shapes=[
-            _scratch((block_b, k), jnp.float32),
-            _scratch((block_b, k), jnp.int32),
+            _scratch((g.block_b, k), jnp.float32),
+            _scratch((g.block_b, k), jnp.int32),
         ],
         interpret=interpret,
     )(Qf, D)

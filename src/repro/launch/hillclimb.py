@@ -18,7 +18,6 @@ import dataclasses
 import json
 import time
 
-import jax
 import numpy as np
 
 PEAK_FLOPS = 197e12

@@ -144,7 +144,8 @@ class BatchingQueue:
         return items
 
     def empty(self) -> bool:
-        return not self._items
+        with self._cv:
+            return not self._items
 
     def next_batch(self, timeout: float = 30.0,
                    stop: threading.Event | None = None,
@@ -223,8 +224,10 @@ class RetrievalServer:
         self._buckets = tuple(caps)
         self.pipeline_depth = max(1, pipeline_depth)
         self.batcher = BatchingQueue(max_batch=max_batch)
-        # (size, t_dispatch, t_done) per executed batch
+        # (size, t_dispatch, t_done) per executed batch; appended by the
+        # completer, snapshotted by stats readers on other threads
         self.batch_log: list[tuple[int, float, float]] = []
+        self._log_lock = threading.Lock()
         self._index_lock = threading.Lock()
         self.swap_count = 0
         self._proj = None
@@ -315,9 +318,10 @@ class RetrievalServer:
 
     def _post(self, scores, ids, replies, t0):
         scores = np.asarray(scores)   # blocks on this batch's D2H only
-        ids = np.asarray(ids)
+        ids = np.asarray(ids)         # (both BEFORE taking any lock)
         t1 = time.perf_counter()
-        self.batch_log.append((len(replies), t0, t1))
+        with self._log_lock:
+            self.batch_log.append((len(replies), t0, t1))
         for i, r in enumerate(replies):
             r.completed_at = t1       # stamp BEFORE the client can wake
             r.put((scores[i], ids[i]))
@@ -333,14 +337,16 @@ class RetrievalServer:
         query projection too (a refit changed ``W_m``); by default the
         existing projection is kept (appends/compaction never change it).
         """
-        proj = self._proj
-        if pruner is not self._KEEP:
-            proj = None
-            if pruner is not None:
-                W, mean = pruner.projection()
-                proj = (jnp.asarray(W),
-                        None if mean is None else jnp.asarray(mean))
+        proj = None
+        if pruner is not self._KEEP and pruner is not None:
+            W, mean = pruner.projection()
+            # device transfers stay OUTSIDE the lock: a dispatch snapshot
+            # must never wait on an H2D copy
+            proj = (jnp.asarray(W),
+                    None if mean is None else jnp.asarray(mean))
         with self._index_lock:
+            if pruner is self._KEEP:
+                proj = self._proj
             self.index = index
             self._proj = proj
             self.swap_count += 1
@@ -349,8 +355,7 @@ class RetrievalServer:
         """Compile every dispatch shape (each bucket) before taking load —
         without this, the first partial batch of each bucket size pays its
         compile mid-serve."""
-        d = (self._proj[0].shape[0] if self._proj is not None
-             else self.index.dim)
+        d = self._query_dim()
         caps = self._buckets if self.bucket_batches else (self.max_batch,)
         for cap in caps:
             jax.block_until_ready(
@@ -404,6 +409,14 @@ class RetrievalServer:
             if idle:
                 self.batcher.kick()   # device drained: flush partial batches
 
+    def _query_dim(self) -> int:
+        """Expected query dimensionality, from a CONSISTENT (index, proj)
+        snapshot: a concurrent ``swap_index(..., pruner=...)`` must not be
+        observed half-applied (old projection, new index)."""
+        with self._index_lock:
+            index, proj = self.index, self._proj
+        return proj[0].shape[0] if proj is not None else index.dim
+
     # -- client API ---------------------------------------------------------
     def submit(self, qvec: np.ndarray) -> "queue.Queue":
         """Open-loop entry: enqueue a query, return its reply queue.
@@ -412,8 +425,7 @@ class RetrievalServer:
         fail its submitter, not poison a whole batch inside the worker.
         """
         qvec = np.asarray(qvec)
-        want = (self._proj[0].shape[0] if self._proj is not None
-                else self.index.dim)
+        want = self._query_dim()
         if qvec.shape != (want,):
             raise ValueError(f"query must have shape ({want},), "
                              f"got {qvec.shape}")
@@ -425,17 +437,25 @@ class RetrievalServer:
             raise RuntimeError("server worker failed") from out
         return out
 
+    def reset_stats(self) -> None:
+        """Drop the batch log (e.g. after a warmup query) so stats reflect
+        steady state only."""
+        with self._log_lock:
+            self.batch_log.clear()
+
     def worker_stats(self) -> dict:
         """Occupancy + worker-side throughput from the executed batches."""
-        if not self.batch_log:
+        with self._log_lock:
+            log = list(self.batch_log)
+        if not log:
             return dict(batches=0, mean_batch=0.0, occupancy=0.0,
                         worker_qps=0.0, service_qps=0.0)
-        sizes = np.array([s for s, _, _ in self.batch_log], dtype=np.float64)
-        t0s = np.array([a for _, a, _ in self.batch_log], dtype=np.float64)
-        t1s = np.array([b for _, _, b in self.batch_log], dtype=np.float64)
+        sizes = np.array([s for s, _, _ in log], dtype=np.float64)
+        t0s = np.array([a for _, a, _ in log], dtype=np.float64)
+        t1s = np.array([b for _, _, b in log], dtype=np.float64)
         span = float(t1s.max() - t0s.min())
         busy = float((t1s - t0s).sum())
-        return dict(batches=len(self.batch_log),
+        return dict(batches=len(log),
                     mean_batch=float(sizes.mean()),
                     occupancy=float(sizes.mean() / self.max_batch),
                     worker_qps=float(sizes.sum() / max(span, 1e-9)),
@@ -471,7 +491,7 @@ def _drive(server: RetrievalServer, Q: np.ndarray) -> tuple[float, np.ndarray]:
     state, matching the client-side numbers.
     """
     server.query(Q[0])
-    server.batch_log.clear()
+    server.reset_stats()
     lat = np.empty(len(Q))
     t0 = time.perf_counter()
     for i in range(len(Q)):
@@ -511,7 +531,7 @@ def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
     """
     rng = np.random.default_rng(seed)
     server.query(Q[0])
-    server.batch_log.clear()
+    server.reset_stats()
     n = len(Q)
     gaps = rng.exponential(1.0 / rate, size=n)
     lat = np.empty(n)
@@ -662,7 +682,7 @@ def main() -> None:
         server.query(Q[0])   # first answered query closes the cold start
         print(f"[serve] cold start (open store -> first query): "
               f"{(time.perf_counter() - t_cold)*1e3:.1f}ms")
-        server.batch_log.clear()
+        server.reset_stats()
     else:
         print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
         ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,

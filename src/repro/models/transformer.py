@@ -13,12 +13,10 @@ Step functions:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import layers as L
 from repro.models import moe as M

@@ -1,0 +1,277 @@
+"""Self-tests for the static-analysis suite (``repro.analysis``).
+
+Two directions: every known-bad fixture must trip EXACTLY its expected
+finding (the analyzers detect what they claim to), and the live repo code
+must produce zero unsuppressed findings (the gate is green at head, so any
+future red is a real regression).
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import Finding, concurrency, jaxpr_lints, pallas_budget
+from repro.analysis.fixtures import BAD_TOPK_CONFIG, bad_jaxpr
+from repro.analysis.report import (apply_baseline, format_text,
+                                   load_baseline, write_report)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "src" / "repro" / "analysis" / "fixtures"
+
+RNG = np.random.default_rng(5)
+
+
+def _int8_corpus(n=256, m=32):
+    D = (RNG.integers(-127, 128, size=(n, m))).astype(np.int8)
+    scale = np.full((m,), 0.05, np.float32)
+    q = RNG.standard_normal((3, m)).astype(np.float32)
+    return jnp.asarray(D), jnp.asarray(scale), jnp.asarray(q)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr lints: bad fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_upcasting_fixture_flagged():
+    D, scale, q = _int8_corpus()
+    entry = lambda x: bad_jaxpr.upcasting_search(D, scale, x)  # noqa: E731
+    fs = jaxpr_lints.check_storage_dtype_stream(
+        "fixture.upcast", entry, (q,), tuple(D.shape), "int8",
+        strip_rows=64)
+    assert [f.check for f in fs] == ["jaxpr.upcast"]
+    assert "convert_element_type" in fs[0].message
+
+
+def test_strip_sized_dequant_not_flagged():
+    """The per-strip in-register dequant is the DESIGN — a convert no
+    larger than one strip must pass."""
+    D, scale, q = _int8_corpus(n=64)             # corpus == one strip
+    entry = lambda x: bad_jaxpr.upcasting_search(D, scale, x)  # noqa: E731
+    fs = jaxpr_lints.check_storage_dtype_stream(
+        "fixture.strip", entry, (q,), tuple(D.shape), "int8",
+        strip_rows=64)
+    assert fs == []
+
+
+def test_two_dispatch_fixture_flagged():
+    D, _, q = _int8_corpus()
+    Df = D.astype(jnp.float32)
+    entry = lambda x: bad_jaxpr.two_dispatch_search(Df, x)  # noqa: E731
+    fs = jaxpr_lints.check_dispatch_count("fixture.2disp", entry, (q,),
+                                          expected=1)
+    assert [f.check for f in fs] == ["jaxpr.extra-dispatch"]
+    assert "2 compute dispatches" in fs[0].message
+
+
+def test_callback_fixture_flagged():
+    D, _, q = _int8_corpus()
+    Df = D.astype(jnp.float32)
+    entry = lambda x: bad_jaxpr.chatty_search(Df, x)  # noqa: E731
+    fs = jaxpr_lints.check_no_callbacks("fixture.callback", entry, (q,))
+    assert len(fs) == 1 and fs[0].check == "jaxpr.host-callback"
+
+
+def test_recompile_fixture_flagged():
+    D, _, q = _int8_corpus(n=64)
+    s = bad_jaxpr.RecompilingSearcher(D.astype(jnp.float32))
+    fs = jaxpr_lints.check_recompile_stability(
+        lambda live, _off: s.search(q, n_valid=live),
+        s.cache_sizes, [(4, 0), (5, 0), (6, 0)], "fixture.recompile")
+    assert [f.check for f in fs] == ["jaxpr.recompile"]
+    assert "grew" in fs[0].message
+
+
+def test_fused_entry_is_single_dispatch():
+    """The repo's own dense fused path is the known-good control."""
+    from repro.core import DenseIndex, StaticPruner
+    D = jnp.asarray(RNG.standard_normal((200, 32)).astype(np.float32))
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    idx = DenseIndex.build(pruner.prune_index(D), quantize_int8=True)
+    W, mean = pruner.projection()
+    q = jnp.asarray(RNG.standard_normal((2, 32)).astype(np.float32))
+    entry = lambda x: idx.search_projected(x, W, k=5, mean=mean)  # noqa: E731
+    assert jaxpr_lints.check_dispatch_count("good", entry, (q,), 1) == []
+    assert jaxpr_lints.check_no_callbacks("good", entry, (q,)) == []
+
+
+# ---------------------------------------------------------------------------
+# pallas budget
+# ---------------------------------------------------------------------------
+
+
+def test_over_budget_config_rejected():
+    fs = pallas_budget.check_topk_config(**BAD_TOPK_CONFIG)
+    errors = [f for f in fs if f.severity == "error"]
+    assert [f.check for f in errors] == ["pallas.vmem-budget"]
+    assert "exceeds" in errors[0].message
+
+
+def test_budget_scales_with_block_and_dtype():
+    small = pallas_budget.estimate_topk_vmem(
+        pallas_budget.topk_geometry(10**6, 128, 64, 10, block_n=512), "int8")
+    big = pallas_budget.estimate_topk_vmem(
+        pallas_budget.topk_geometry(10**6, 128, 64, 10, block_n=4096),
+        "float32")
+    assert big["total"] > small["total"]
+    assert big["d_strip"] == 4 * 8 * small["d_strip"]  # 8x rows, 4x width
+
+
+def test_geometry_invariants_hold_on_awkward_shapes():
+    for n, m, B, k, bn, bb in ((601, 48, 3, 7, 256, 64),
+                               (8, 128, 1, 10, 1024, 128),
+                               (4096, 64, 129, 100, 1000, 8)):
+        assert pallas_budget.check_topk_config(
+            n, m, B, k, block_n=bn, block_b=bb, dtype="int8",
+            budget=2**40) == [f for f in pallas_budget.check_topk_config(
+                n, m, B, k, block_n=bn, block_b=bb, dtype="int8",
+                budget=2**40) if f.check == "pallas.alignment"]
+
+
+def test_traced_index_maps_accept_good_kernel():
+    import functools
+    from repro.kernels.topk_score import topk_score_pallas
+    D = RNG.standard_normal((300, 128)).astype(np.float32)
+    Q = RNG.standard_normal((4, 128)).astype(np.float32)
+    fs = pallas_budget.check_traced_index_maps(
+        "good", functools.partial(topk_score_pallas, k=5, block_n=128,
+                                  block_b=8), (D, Q))
+    assert fs == []
+
+
+def test_traced_index_maps_catch_out_of_bounds():
+    from jax.experimental import pallas as pl
+
+    def bad(x):
+        return pl.pallas_call(
+            lambda x_ref, o_ref: o_ref.__setitem__(Ellipsis, x_ref[...]),
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8, 16), lambda i: (i + 1, 0))],  # skew
+            out_specs=pl.BlockSpec((8, 16), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((32, 16), jnp.float32),
+            interpret=True)(x)
+
+    x = np.zeros((32, 16), np.float32)
+    fs = pallas_budget.check_traced_index_maps("fixture.oob", bad, (x,))
+    assert any(f.check == "pallas.index-map" and f.severity == "error"
+               for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# concurrency lint
+# ---------------------------------------------------------------------------
+
+
+def test_bad_locks_fixture_findings_exact():
+    fs = concurrency.analyze([("fx", FIXTURES / "bad_locks.py")])
+    keys = sorted(f.key for f in fs)
+    assert "conc.unguarded-field:fx:UnguardedCounter.peek:count" in keys
+    assert "conc.unlocked-shared-mutable:fx:NeverLockedLog:log" in keys
+    assert "conc.blocking-under-lock:fx:SleepyWriter.publish:np.asarray" \
+        in keys
+    assert "conc.blocking-under-lock:fx:SleepyWriter.publish:time.sleep" \
+        in keys
+    cycles = [f for f in fs if f.check == "conc.lock-order"]
+    assert len(cycles) == 1
+    assert "Left._lock" in cycles[0].message
+    assert "Right._lock" in cycles[0].message
+    assert len(fs) == 5                       # nothing beyond the five sins
+
+
+def test_lock_propagation_suppresses_false_positive():
+    """A private helper whose every call site holds the lock is analysed
+    as locked — the _mirror_ops pattern."""
+    src = '''
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.state = []
+
+    def mutate(self, x):
+        with self._lock:
+            self._apply(x)
+
+    def replace(self, xs):
+        with self._lock:
+            self.state.clear()
+            for x in xs:
+                self._apply(x)
+
+    def _apply(self, x):
+        self.state.append(x)
+'''
+    infos = concurrency.analyze_classes(src, "fx")
+    assert concurrency.field_findings(infos[0]) == []
+
+
+def test_real_serving_code_clean_modulo_baseline():
+    fs = concurrency.run()
+    report = apply_baseline(fs, load_baseline(REPO
+                                              / "analysis_baseline.json"))
+    assert report.gating == ()
+    assert report.stale == ()
+
+
+# ---------------------------------------------------------------------------
+# report / baseline / CLI
+# ---------------------------------------------------------------------------
+
+
+def _f(check="c.x", where="w", sev="error"):
+    return Finding(check=check, where=where, message="m", severity=sev)
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = [_f(where="a"), _f(where="b"), _f(where="w2", sev="warn")]
+    base = tmp_path / "b.json"
+    base.write_text(json.dumps({"suppressions": [
+        {"key": "c.x:a", "reason": "reviewed"},
+        {"key": "c.x:gone", "reason": "paid off"}]}))
+    report = apply_baseline(findings, load_baseline(base))
+    assert [f.where for f in report.findings] == ["b", "w2"]
+    assert report.gating == (findings[1],)       # warn does not gate
+    assert report.stale == ("c.x:gone",)
+    out = tmp_path / "r.json"
+    write_report(report, out)
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == "repro.analysis/v1"
+    assert doc["counts"] == {"findings": 2, "gating": 1, "suppressed": 1,
+                             "stale_suppressions": 1}
+    txt = format_text(report)
+    assert "stale-suppression" in txt and "c.x:b" in txt
+
+
+def test_missing_baseline_is_empty():
+    assert load_baseline(None) == {}
+    assert load_baseline("/nonexistent/x.json") == {}
+
+
+def test_duplicate_baseline_key_rejected(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"suppressions": [
+        {"key": "k", "reason": "r1"}, {"key": "k", "reason": "r2"}]}))
+    with pytest.raises(ValueError, match="duplicate"):
+        load_baseline(p)
+
+
+def test_cli_conc_gate_green_and_red(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "rep.json"
+    rc = main(["--only", "conc", "--json", str(out),
+               "--baseline", str(REPO / "analysis_baseline.json"),
+               "--fail-on-findings"])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["counts"]["gating"] == 0
+    assert doc["counts"]["suppressed"] == 2
+    # without the baseline the same findings gate
+    rc = main(["--only", "conc", "--json", "",
+               "--baseline", str(tmp_path / "missing.json"),
+               "--fail-on-findings"])
+    assert rc == 1

@@ -1,7 +1,5 @@
 """Checkpoint manager: atomic commit, async, retention, elastic restore."""
 import os
-import threading
-import time
 
 import numpy as np
 import pytest

@@ -1,11 +1,10 @@
 """Data pipelines: determinism, prefetch, graph sampling, corpus structure."""
 import numpy as np
-import pytest
 
 from repro.data.graph import CSRGraph, NeighborSampler, batched_molecules, random_graph
 from repro.data.recsys import ctr_batch, two_tower_batch
 from repro.data.synthetic import ENCODER_PROFILES, make_corpus, make_dataset
-from repro.data.tokens import Prefetcher, pair_batch, token_batch
+from repro.data.tokens import Prefetcher, token_batch
 
 
 def test_token_batch_deterministic():

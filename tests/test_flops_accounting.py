@@ -1,7 +1,6 @@
 """Trip-count-aware cost accounting (launch/flops.py)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.flops import hlo_collectives, jaxpr_cost

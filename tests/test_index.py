@@ -1,6 +1,5 @@
 """DenseIndex / ShardedDenseIndex / int8 quantisation."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

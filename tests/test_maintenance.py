@@ -4,7 +4,7 @@ import jax.numpy as jnp
 
 from repro.core.maintenance import IndexUpdater, captured_energy
 from repro.core.pruning import StaticPruner
-from repro.data.synthetic import make_corpus, make_ood_corpus
+from repro.data.synthetic import make_corpus
 
 
 def _corpus(seed=0, n=2000, domain_seed=None):
@@ -149,3 +149,70 @@ def test_captured_energy_bounds():
     up = IndexUpdater.build(D, cutoff=0.5)
     e = captured_energy(D, up.pruner)
     assert 0.0 < e <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Lock-discipline regressions (crop of `python -m repro.analysis` findings:
+# telemetry read index/pruner without the updater lock, _reference_energy
+# wrote its cache bare and did D2H transfers under the lock)
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_safe_under_concurrent_appends():
+    """delta_fraction/scale_divergence/drift_score/search snapshot
+    (index, pruner) under the lock: hammering them while another thread
+    appends must never raise (previously they could observe a half-swapped
+    segment set)."""
+    import threading
+
+    D = _corpus(n=600)
+    up = IndexUpdater.build(D, cutoff=0.5, quantize_int8=True,
+                            delta_capacity=64)
+    probe = _corpus(seed=2, n=64, domain_seed=3)
+    errs = []
+    done = threading.Event()
+
+    def appender():
+        try:
+            for i in range(30):
+                up.add_documents(_corpus(seed=i + 10, n=40,
+                                         domain_seed=4)[:37])
+        finally:
+            done.set()
+
+    th = threading.Thread(target=appender)
+    th.start()
+    try:
+        while not done.is_set():
+            try:
+                assert 0.0 <= up.delta_fraction <= 1.0
+                assert up.scale_divergence() >= 1.0
+                assert up.drift_score(probe) > 0.0
+                up.needs_refit(probe)
+                up.search(probe[:2], k=3)
+            except BaseException as e:  # noqa: BLE001 — must fail the test
+                errs.append(e)
+                break
+    finally:
+        th.join(timeout=60.0)
+    assert not errs
+    assert up.appended_rows == 30 * 37
+    assert abs(up.delta_fraction - 30 * 37 / up.index.n) < 1e-9
+
+
+def test_reference_energy_cached_once_and_refit_coherent():
+    """The lazy fit_energy fill happens outside the lock but commits under
+    it, and a refit that swaps the pruner mid-derivation must not be
+    clobbered by the stale value."""
+    D = _corpus(n=400)
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    up = IndexUpdater(pruner=pruner, index=pruner.build_index(D))
+    assert up.fit_energy is None
+    ref = up._reference_energy()
+    assert up.fit_energy == ref                  # cached under the lock
+    assert ref == up._reference_energy()         # stable on re-read
+    D2 = _corpus(seed=9, n=400, domain_seed=7)
+    up.refit(D2)
+    assert up.fit_energy is not None and up.fit_energy != ref
+    assert abs(up.drift_score(D2) - captured_energy(D2, up.pruner)
+               / up.fit_energy) < 1e-9

@@ -1,0 +1,122 @@
+"""Multi-host load contract for ``ShardedDenseIndex.load``.
+
+A pod-scale load must read ONLY the shards this process addresses
+(``addressable_devices_indices_map``): 1/num_hosts of the store per host,
+never a full-index host copy. Single-process CI can still pin the
+contract: every locally-addressable row is read exactly once, shard
+windows partition the padded row space, and a sharding that claims only a
+SUBSET of devices (what one process of a multi-host job sees) yields read
+ranges confined to that subset's rows.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
+from repro.core.index import _addressable_shard_ranges
+from repro.core.store import save_index
+
+RNG = np.random.default_rng(11)
+
+
+def _mesh(ndev=4):
+    if jax.device_count() < ndev:
+        pytest.skip(f"needs {ndev} devices, have {jax.device_count()}")
+    return jax.make_mesh((ndev,), ("data",))
+
+
+def _store(tmp_path, n=103, d=32, quant=True):
+    D = jnp.asarray(RNG.standard_normal((n, d)).astype(np.float32))
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    index = pruner.build_index(D, quantize_int8=quant)
+    return save_index(str(tmp_path / "st"), index, pruner=pruner), D, pruner
+
+
+class _CountingStore:
+    """Delegating wrapper that records every read_rows window."""
+
+    def __init__(self, store):
+        self._store = store
+        self.reads: list[tuple[int, int]] = []
+
+    def read_rows(self, lo, hi):
+        self.reads.append((int(lo), int(hi)))
+        return self._store.read_rows(lo, hi)
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
+
+
+def test_load_reads_each_local_row_exactly_once(tmp_path):
+    mesh = _mesh()
+    store, D, pruner = _store(tmp_path)          # 103 rows: padding shard
+    counting = _CountingStore(store)
+    sidx = ShardedDenseIndex.load(counting, mesh)
+
+    ndev = jax.device_count()
+    assert len(counting.reads) == ndev           # one read per local shard
+    covered = np.zeros(store.n, dtype=int)
+    for lo, hi in counting.reads:
+        covered[lo:hi] += 1
+    assert (covered == 1).all()                  # each row exactly once
+
+    # and the loaded index answers identically to the unsharded load
+    dense = DenseIndex.load(store)
+    W, mean = pruner.projection()
+    q = jnp.asarray(RNG.standard_normal((3, D.shape[1]))
+                    .astype(np.float32))
+    s_sh, i_sh = sidx.search_projected(q, W, k=5, mean=mean)
+    s_dn, i_dn = dense.search_projected(q, W, k=5, mean=mean)
+    np.testing.assert_array_equal(np.asarray(i_sh), np.asarray(i_dn))
+    np.testing.assert_allclose(np.asarray(s_sh), np.asarray(s_dn),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_shard_ranges_partition_padded_rows():
+    mesh = _mesh()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sharding = NamedSharding(mesh, P(("data",), None))
+    n, ndev = 103, jax.device_count()
+    n_padded = n + (-n) % ndev
+    ranges = _addressable_shard_ranges(sharding, (n_padded, 8), n)
+    windows = sorted((start, stop) for _, start, stop, _, _ in ranges)
+    assert windows[0][0] == 0 and windows[-1][1] == n_padded
+    for (_, a_stop), (b_start, _) in zip(windows, windows[1:]):
+        assert a_stop == b_start                 # contiguous, disjoint
+    for _, start, stop, lo, hi in ranges:
+        assert start <= lo <= hi <= stop         # clamp stays in-window
+        assert hi <= n                           # never reads padding rows
+
+
+class _SubsetSharding:
+    """What one process of a multi-host job observes: the global map has
+    every shard, the addressable map only this host's slice."""
+
+    def __init__(self, sharding, shape, keep):
+        self._all = sorted(
+            sharding.addressable_devices_indices_map(shape).items(),
+            key=lambda kv: kv[1][0].start or 0)
+        self._keep = keep
+
+    def addressable_devices_indices_map(self, shape):
+        return dict(self._all[:self._keep])
+
+
+def test_subset_addressable_reads_only_local_rows():
+    mesh = _mesh()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sharding = NamedSharding(mesh, P(("data",), None))
+    n, ndev = 100, jax.device_count()
+    n_padded = n + (-n) % ndev
+    per = n_padded // ndev
+    keep = ndev // 2                             # "this host" owns half
+    fake = _SubsetSharding(sharding, (n_padded, 8), keep)
+    ranges = _addressable_shard_ranges(fake, (n_padded, 8), n)
+    assert len(ranges) == keep
+    rows = sorted((lo, hi) for _, _, _, lo, hi in ranges)
+    # the union of local reads is exactly the first half's rows — the
+    # other host's rows are never touched
+    assert rows[0][0] == 0
+    assert max(hi for _, hi in rows) <= keep * per

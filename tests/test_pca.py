@@ -3,13 +3,11 @@ test_pca_properties.py behind ``pytest.importorskip`` — a missing optional
 package must never kill tier-1 collection."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.core import (fit_pca, fit_pca_streaming, gram, transform,
-                        transform_query, inverse_transform, m_from_cutoff,
-                        cutoff_from_m, m_for_variance,
-                        explained_variance_ratio, save_pca, load_pca)
+                        m_from_cutoff, cutoff_from_m, m_for_variance,
+                        save_pca, load_pca)
 
 RNG = np.random.default_rng(0)
 

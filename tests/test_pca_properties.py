@@ -6,7 +6,6 @@ the package is absent (it ships in the ``dev`` extra).
 """
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 pytest.importorskip("hypothesis")

@@ -1,10 +1,9 @@
 """Rowwise-AdaGrad embedding optimizer (repro.optim.rowwise)."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.optim.rowwise import (RowwiseConfig, combine_duplicate_rows,
+from repro.optim.rowwise import (combine_duplicate_rows,
                                  rowwise_adagrad_update)
 
 

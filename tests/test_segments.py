@@ -24,8 +24,7 @@ import jax.numpy as jnp
 from repro.core import (DeltaSegment, DenseIndex, IndexStore, IndexStoreError,
                         SegmentedIndex, ShardedDenseIndex, StaticPruner,
                         save_index)
-from repro.core.index import (segment_jit_cache_size,
-                              segment_jit_cache_sizes)
+from repro.core.index import segment_jit_cache_sizes
 from repro.core.maintenance import IndexUpdater
 from repro.core.quantization import quantize_int8_per_dim
 
@@ -484,8 +483,8 @@ def test_compact_reconciles_racing_appends():
     orig_iter = up._iter_dequant_rows
     started = threading.Event()
 
-    def slow_iter(index, block_rows):
-        for blk in orig_iter(index, block_rows):
+    def slow_iter(index, block_rows, store):
+        for blk in orig_iter(index, block_rows, store):
             started.set()
             time.sleep(0.02)                 # hold the stream open
             yield blk

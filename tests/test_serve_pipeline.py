@@ -216,3 +216,80 @@ def test_pipeline_overlaps_batches_in_flight(served):
         assert overlapped > 0, "no batch was staged while another ran"
     finally:
         server.close()
+
+
+# ---------------------------------------------------------------------------
+# Lock-discipline regressions (crop of `python -m repro.analysis` findings:
+# unguarded index/_proj snapshots, unlocked batch_log, bare _items read)
+# ---------------------------------------------------------------------------
+
+
+def test_reset_stats_clears_worker_log(served):
+    D, pruner, index = served
+    server = RetrievalServer(index, pruner, k=1, max_batch=4)
+    try:
+        server.query(D[0])
+        assert server.worker_stats()["batches"] >= 1
+        server.reset_stats()
+        assert server.worker_stats()["batches"] == 0
+    finally:
+        server.close()
+
+
+def test_worker_stats_safe_while_completer_appends(served):
+    """worker_stats() snapshots batch_log under its lock: polling it from
+    another thread mid-drive must never raise or observe a torn log row
+    (the completer appends concurrently)."""
+    D, pruner, index = served
+    server = RetrievalServer(index, pruner, k=1, max_batch=4,
+                             pipeline_depth=3)
+    errs, counts = [], []
+    stop = threading.Event()
+
+    def poll():
+        try:
+            while not stop.is_set():
+                s = server.worker_stats()
+                assert s["batches"] >= 0 and s["mean_batch"] >= 0.0
+                counts.append(s["batches"])
+        except BaseException as e:  # noqa: BLE001 — must fail the test
+            errs.append(e)
+
+    th = threading.Thread(target=poll)
+    th.start()
+    try:
+        _drive_open(server, np.repeat(D, 2, axis=0), rate=1e5)
+    finally:
+        stop.set()
+        th.join(timeout=10.0)
+        server.close()
+    assert not errs
+    assert counts == sorted(counts)    # log only grows between resets
+
+
+def test_submit_validation_tracks_index_swap(served):
+    """submit() reads (index, projection) as ONE locked snapshot: after a
+    swap that drops the pruner, validation must follow the new state."""
+    D, pruner, index = served
+    d_raw = D.shape[1]
+    m = index.dim
+    assert m < d_raw
+    server = RetrievalServer(index, pruner, k=1, max_batch=4)
+    try:
+        server.query(D[0])                       # raw-dim queries accepted
+        server.swap_index(index, pruner=None)    # now serves projected dim
+        with pytest.raises(ValueError, match=str(m)):
+            server.submit(D[0])
+        scores, ids = server.query(np.zeros((m,), np.float32))
+        assert ids.shape == (1,)
+    finally:
+        server.close()
+
+
+def test_batching_queue_empty_tracks_submit_and_drain():
+    bq = BatchingQueue(max_batch=4)
+    assert bq.empty()
+    bq.submit(np.zeros((2,), np.float32))
+    assert not bq.empty()
+    assert len(bq.drain()) == 1
+    assert bq.empty()

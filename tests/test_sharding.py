@@ -1,6 +1,5 @@
 """Sharding rules engine: divisibility fallback, logical axes, family rules."""
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.par.compat import abstract_mesh
