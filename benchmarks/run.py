@@ -27,6 +27,11 @@ _SERVE_MODE_KEYS = ("qps", "p50_ms", "p95_ms", "p99_ms", "worker_qps")
 # telemetry and a ZERO steady-state recompile count
 _LIVE_ROWS = ("static", "append_0", "append_low", "append_high")
 _LIVE_APPEND_KEYS = ("appended_rows", "swaps", "recompiles_steady")
+# cascade Pareto rows: every operating point (baselines included) must
+# report its oracle recall and saturated worker qps, at least one
+# single-resolution baseline row must anchor the comparison, and the
+# steady-state recompile count must be zero (fixed-nk cascade contract)
+_CASCADE_ROW_KEYS = ("recall_at_10", "worker_qps", "recompiles_steady")
 
 
 def check_perf_schema(results: dict) -> None:
@@ -76,6 +81,23 @@ def check_perf_schema(results: dict) -> None:
                         f"{cfg[rowname]['recompiles_steady']} steady-state "
                         f"recompiles — appends must never stall serving on "
                         f"a jit compile (fixed-capacity delta contract)")
+    ca = results.get("cascade")
+    if not isinstance(ca, dict) or not isinstance(ca.get("rows"), dict) \
+            or not ca["rows"]:
+        raise SystemExit("BENCH_perf.json schema: missing or empty "
+                         "'cascade.rows' section")
+    if not any(row.get("baseline") for row in ca["rows"].values()):
+        raise SystemExit("cascade: no single-resolution baseline row — "
+                         "the Pareto sweep has lost its reference point")
+    for name, row in ca["rows"].items():
+        missing = [k for k in _CASCADE_ROW_KEYS if k not in row]
+        if missing:
+            raise SystemExit(f"cascade.{name}: missing keys {missing}")
+        if row["recompiles_steady"] != 0:
+            raise SystemExit(
+                f"cascade.{name}: {row['recompiles_steady']} steady-state "
+                f"recompiles — with nk fixed, every cascade dispatch must "
+                f"reuse its compiled shape")
 
 
 def main() -> None:

@@ -260,6 +260,30 @@ def run() -> list[Finding]:
                 label, entry, (Q,), (n, m), str(idx.vectors.dtype),
                 strip_rows=block)
 
+    # -- cascade (dense x dense): coarse scan + shortlist + gather +
+    # exact rescore all trace into the SAME single fused dispatch ----------
+    from repro.core import CascadeIndex
+    B = int(Q.shape[0])
+    for quant, backend, block in ((False, "jnp", None), (True, "jnp", 128),
+                                  (True, "pallas", 128)):
+        cas = CascadeIndex.build(Dh, m_coarse=max(2, m // 2), n_factor=2,
+                                 quantize_int8=quant, backend=backend)
+        label = f"CascadeIndex.search_projected[{backend}" \
+                f"{',int8' if quant else ''}]"
+        entry = (lambda c: lambda q: c.search_projected(
+            q, W, k=10, mean=mean, block=block))(cas)
+        findings += check_dispatch_count(label, entry, (Q,), expected=1)
+        findings += check_no_callbacks(label, entry, (Q,))
+        if quant:
+            # the (U, m) = (B*nk, m) int8->f32 upcast of the gathered
+            # shortlist IS the rescore stage's dequant unit (one matmul
+            # operand, not a corpus shadow copy) — price the strip as the
+            # larger of the coarse scan strip and the whole shortlist
+            nk = min(cas.n_factor * 10, cas.n)
+            findings += check_storage_dtype_stream(
+                label, entry, (Q,), (n, m), str(cas.full.vectors.dtype),
+                strip_rows=max(block, B * nk))
+
     # -- sharded: one dispatch wrapping shard_map + merge ------------------
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
     for quant in (False, True):
@@ -288,6 +312,20 @@ def run() -> list[Finding]:
     # (storage-dtype streaming of the base is covered by the dense/sharded
     # checks above; deltas upcast their whole small capacity by design)
 
+    # -- segmented cascade: projection + per-segment coarse scans + coarse
+    # merge + shortlist + per-segment rescores + select = 2*nd + 6 ---------
+    rng_c = np.random.default_rng(7)
+    cseg = CascadeIndex.build(Dh, m_coarse=max(2, m // 2), n_factor=2,
+                              quantize_int8=True
+                              ).segmented(delta_capacity=64)
+    cseg = cseg.append(rng_c.standard_normal((70, m)).astype(np.float32))
+    cnd = len(cseg.full.deltas)
+    label = f"CascadeIndex.search_projected[seg,int8,{cnd}d]"
+    entry = lambda q: cseg.search_projected(q, W, k=10, mean=mean)  # noqa: E731
+    findings += check_dispatch_count(label, entry, (Q,),
+                                     expected=2 * cnd + 6)
+    findings += check_no_callbacks(label, entry, (Q,))
+
     # -- compaction streaming: the per-block projection is one dispatch ----
     label = "pca.transform[compaction-block]"
     block = jnp.asarray(rng.standard_normal((64, D.shape[1]))
@@ -304,9 +342,36 @@ def run() -> list[Finding]:
         state["seg"].search_projected(Q, W, k=5, mean=mean)
 
     # stays within the open delta's capacity: every step changes the live
-    # count and the next segment's id offset but must reuse every jit
+    # count and the next segment's id offset but must reuse every jit.
+    # One compile per distinct append-block SHAPE is the documented
+    # ``_delta_update`` contract, and whether a given append exercises it
+    # (vs the scale-widening requant path) depends on the data — so every
+    # sweep shape is warmed deterministically for both the full and the
+    # cascade's coarse width before anything is measured.
+    from repro.core.index import _delta_update
     sweep = [(1, 0), (2, 0), (3, 0), (5, 0), (1, 0)]
+    store_dt = seg.deltas[-1].vectors.dtype
+    for r in sorted({lr for lr, _ in sweep}):
+        for mm in (m, max(2, m // 2)):
+            _delta_update(jnp.zeros((64, mm), store_dt),
+                          jnp.zeros((r, mm), store_dt), jnp.int32(0))
     findings += check_recompile_stability(
         dispatch, segment_jit_cache_sizes, sweep,
         "SegmentedIndex.append+search_projected")
+
+    # -- cascade recompile stability: appends grow BOTH resolutions; every
+    # per-segment rescore takes live count/offset as traced operands and
+    # nk = n_factor*k stays fixed, so no cascade jit may recompile. The
+    # sweep stays inside the open delta's capacity (the part count — a
+    # legitimate static shape — is unchanged throughout).
+    cstate = {"cas": cseg}
+
+    def cdispatch(live_rows: int, _offset: int) -> None:
+        cstate["cas"] = cstate["cas"].append(
+            rng_c.standard_normal((live_rows, m)).astype(np.float32))
+        cstate["cas"].search_projected(Q, W, k=5, mean=mean)
+
+    findings += check_recompile_stability(
+        cdispatch, segment_jit_cache_sizes, sweep,
+        "CascadeIndex.append+search_projected")
     return findings

@@ -51,7 +51,8 @@ def _width(dtype: str) -> int:
     return _WIDTH.get(str(dtype), 4)
 
 
-def estimate_topk_vmem(g: TopKGeometry, dtype: str) -> dict[str, int]:
+def estimate_topk_vmem(g: TopKGeometry, dtype: str,
+                       with_ids: bool = False) -> dict[str, int]:
     """Resident-bytes breakdown of one ``topk_score_pallas`` dispatch.
 
     Inputs/outputs are priced double-buffered (the Pallas pipeline keeps
@@ -59,21 +60,25 @@ def estimate_topk_vmem(g: TopKGeometry, dtype: str) -> dict[str, int]:
     scratch is persistent single-buffered; the kernel's largest live
     intermediates — the (block_b, block_n) f32 score strip, its int32 id
     strip, the fold buffers and the (k + fold_w) candidate rows — are
-    priced once.
+    priced once. ``with_ids`` adds the cascade rescore's explicit
+    ``row_ids`` strip: a double-buffered (1, block_n) int32 input (the
+    broadcast gids buffer replaces the plain mode's iota — same bytes,
+    already priced as ``gids``).
     """
     w = _width(dtype)
     q_tile = 2 * g.block_b * g.m * 4                  # f32 query tile
     d_strip = 2 * g.block_n * g.m * w                 # storage-dtype strip
+    ids_strip = 2 * g.block_n * 4 if with_ids else 0  # row_ids int32 strip
     outs = 2 * g.block_b * g.k * (4 + 4)              # scores + ids
     scratch = g.block_b * g.k * (4 + 4)               # running top-k
     scores = g.block_b * g.block_n * 4                # S_blk f32
-    gids = g.block_b * g.block_n * 4                  # iota int32
+    gids = g.block_b * g.block_n * 4                  # iota/broadcast int32
     dequant = g.block_n * g.m * 4 if w < 4 else 0     # in-register upcast
     fold = g.block_b * g.fold_r * g.fold_w * (4 + 4)  # fs + fi
     cand = g.block_b * (g.k + g.fold_w) * (4 + 4)     # merge buffer
-    parts = dict(q_tile=q_tile, d_strip=d_strip, dequant=dequant,
-                 scores=scores, gids=gids, fold=fold, cand=cand,
-                 scratch=scratch, outputs=outs)
+    parts = dict(q_tile=q_tile, d_strip=d_strip, ids_strip=ids_strip,
+                 dequant=dequant, scores=scores, gids=gids, fold=fold,
+                 cand=cand, scratch=scratch, outputs=outs)
     parts["total"] = sum(parts.values())
     return parts
 
@@ -99,15 +104,15 @@ def estimate_project_vmem(n: int, d: int, m: int, *, block_rows: int,
 
 def check_topk_config(n: int, m: int, B: int, k: int, *,
                       block_n: int = 1024, block_b: int = 128,
-                      dtype: str = "float32",
+                      dtype: str = "float32", with_ids: bool = False,
                       budget: int = DEFAULT_BUDGET) -> list[Finding]:
     """Budget + tiling-invariant findings for one top-k scan config."""
     g = topk_geometry(n, m, B, k, block_n=block_n, block_b=block_b)
     label = (f"topk_score[m={m},k={k},bn={g.block_n},bb={g.block_b},"
-             f"{dtype}]")
+             f"{dtype}{',ids' if with_ids else ''}]")
     findings: list[Finding] = []
 
-    est = estimate_topk_vmem(g, dtype)
+    est = estimate_topk_vmem(g, dtype, with_ids=with_ids)
     if est["total"] > budget:
         top = sorted((v, c) for c, v in est.items() if c != "total")[-2:]
         hot = ", ".join(f"{c}={v // 1024}KiB" for v, c in reversed(top))
@@ -268,6 +273,25 @@ SERVING_PROJECT_CONFIGS = (
     (1_000_000, 768, 128, 2048, True),
 )
 
+#: cascade geometries — the coarse first pass keeps N·k candidates per
+#: query over the narrow int8 view, then the rescore scans the U = B·N·k
+#: gathered full-m rows with an explicit ``row_ids`` strip.
+CASCADE_COARSE_CONFIGS = (
+    # n, m_coarse, B, N*k, block_n, block_b, dtype — deepest shortlist N=64
+    (1_000_000, 192, 32, 640, 1024, 32, "int8"),
+    (1_000_000, 128, 32, 320, 1024, 32, "int8"),
+    (1_000_000, 64, 32, 160, 1024, 32, "int8"),
+    (1_000_000, 32, 32, 80, 1024, 32, "int8"),
+)
+CASCADE_RESCORE_CONFIGS = (
+    # U = B*N*k rows at full m, final k — the BENCH_perf cascade grid
+    (1_280, 384, 32, 10, 1024, 32, "float32"),    # N=4
+    (2_560, 384, 32, 10, 1024, 32, "int8"),       # N=8
+    (5_120, 384, 32, 10, 1024, 32, "int8"),       # N=16
+    (10_240, 384, 32, 10, 1024, 32, "float32"),   # N=32
+    (20_480, 384, 32, 10, 1024, 32, "float32"),   # N=64
+)
+
 
 def run(budget: int = DEFAULT_BUDGET) -> list[Finding]:
     """Budget-check the repo's shipped kernel configs and bounds-check the
@@ -280,6 +304,12 @@ def run(budget: int = DEFAULT_BUDGET) -> list[Finding]:
     for n, m, B, k, bn, bb, dt in SERVING_TOPK_CONFIGS:
         findings += check_topk_config(n, m, B, k, block_n=bn, block_b=bb,
                                       dtype=dt, budget=budget)
+    for n, m, B, k, bn, bb, dt in CASCADE_COARSE_CONFIGS:
+        findings += check_topk_config(n, m, B, k, block_n=bn, block_b=bb,
+                                      dtype=dt, budget=budget)
+    for n, m, B, k, bn, bb, dt in CASCADE_RESCORE_CONFIGS:
+        findings += check_topk_config(n, m, B, k, block_n=bn, block_b=bb,
+                                      dtype=dt, with_ids=True, budget=budget)
     for n, d, m, rows, quant in SERVING_PROJECT_CONFIGS:
         findings += check_project_config(n, d, m, block_rows=rows,
                                          quant=quant, budget=budget)
@@ -292,6 +322,14 @@ def run(budget: int = DEFAULT_BUDGET) -> list[Finding]:
     findings += check_traced_index_maps(
         "topk_score_pallas[600x128]",
         functools.partial(topk_score_pallas, k=10, block_n=128, block_b=8),
+        (D, Q))
+    # cascade rescore mode: the extra (1, n) row_ids operand gets its own
+    # BlockSpec — its windows must stay inside the padded ids row too
+    ids = np.arange(600, dtype=np.int32)
+    findings += check_traced_index_maps(
+        "topk_score_pallas[600x128,ids]",
+        functools.partial(topk_score_pallas, k=10, block_n=128, block_b=8,
+                          row_ids=ids),
         (D, Q))
     X = rng.standard_normal((600, 64)).astype(np.float32)
     W = rng.standard_normal((64, 32)).astype(np.float32)

@@ -603,9 +603,12 @@ def segment_jit_cache_sizes() -> dict:
     """Per-jit compiled-variant counts for every jit the segmented search
     path can touch — the diagnosable form of ``segment_jit_cache_size``
     (a failure names the function that recompiled)."""
-    return {fn.__wrapped__.__name__: fn._cache_size()
-            for fn in (_delta_topk, _concat_topk, _project_nofold,
-                       _scan_topk, _dense_search_projected, _delta_update)}
+    from repro.core import cascade  # lazy: cascade imports this module
+    sizes = {fn.__wrapped__.__name__: fn._cache_size()
+             for fn in (_delta_topk, _concat_topk, _project_nofold,
+                        _scan_topk, _dense_search_projected, _delta_update)}
+    sizes.update(cascade._jit_cache_sizes())
+    return sizes
 
 
 def segment_jit_cache_size() -> int:

@@ -40,6 +40,18 @@ mutations (``add_delta`` / ``append`` / ``replace_segment``) all follow
 the blob-then-manifest-swap protocol; whole-store replacement (compaction
 building a fresh base) reuses ``checkpoint.manager.commit_dir``.
 
+**Resolutions.** A manifest may also carry a ``resolutions`` list: extra
+*coarse* views of the SAME rows at a smaller width — the leading
+``m < dim`` PCA columns (dims nest, so no second projection state exists),
+usually re-quantised int8 with their own scale. Each entry reuses the
+chunked-blob layout (``chunks`` + optional ``scale_file`` + its own
+``dtype``) and covers exactly the immutable BASE segment's rows: delta
+segments grow only the full-resolution store, and a live cascade derives
+coarse delta rows from the full deltas at load/append time. ``open``
+refuses a resolution whose row count disagrees with the base or whose m
+does not nest strictly inside ``dim`` — a mismatched pair would silently
+rescore the wrong rows.
+
 Reads are host-streamed: chunks are memory-mapped (``np.load(mmap_mode=
 'r')``), so assembling a device-resident index never needs a second full
 host copy — ``DenseIndex.load`` copies one chunk at a time to device, and
@@ -90,7 +102,21 @@ def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
     queries).
     """
     import numpy as _np
+    from repro.core.cascade import CascadeIndex
     from repro.core.index import SegmentedIndex
+    if isinstance(index, CascadeIndex):
+        # full resolution commits through the normal (possibly segmented)
+        # path; the coarse base rides along as a `resolutions` entry, so
+        # one artifact round-trips the whole cascade via CascadeIndex.load
+        store = save_index(path, index.full, pruner=pruner, meta=meta,
+                           chunk_rows=chunk_rows)
+        coarse_base = getattr(index.coarse, "base", index.coarse)
+        store.add_resolution(
+            _np.asarray(coarse_base.vectors[:coarse_base.n]),
+            scale=None if coarse_base.scale is None
+            else _np.asarray(coarse_base.scale),
+            chunk_rows=chunk_rows)
+        return store
     if isinstance(index, SegmentedIndex):
         # base commits through the normal path, then each delta is replayed
         # as a durable segment mutation — the artifact round-trips through
@@ -389,6 +415,56 @@ class IndexStore:
                     raise IndexStoreError(
                         f"{self.path}: segment {s['name']} holds {s['n']} "
                         f"rows over its capacity {cap}")
+        self._validate_resolutions()
+
+    def _validate_resolutions(self) -> None:
+        """A coarse resolution must be a nested, row-aligned view of the
+        base: same rows in the same order at a strictly smaller m. A
+        mismatch would make cascade shortlist ids address the wrong
+        rescore rows, so open() refuses loudly."""
+        m = self.manifest
+        base_n = int(self._segment_entries()[0]["n"])
+        seen_m: set[int] = set()
+        for r in m.get("resolutions", ()):
+            for key in ("name", "m", "dtype", "chunks"):
+                if key not in r:
+                    raise IndexStoreError(
+                        f"{self.path}: resolution entry missing {key!r}")
+            rm = int(r["m"])
+            if not 0 < rm < m["dim"]:
+                raise IndexStoreError(
+                    f"{self.path}: resolution {r['name']} has m={rm}, which "
+                    f"does not nest inside the store's dim={m['dim']} "
+                    f"(need 0 < m < dim — PCA leading columns)")
+            if rm in seen_m:
+                raise IndexStoreError(
+                    f"{self.path}: duplicate resolution m={rm}")
+            seen_m.add(rm)
+            rows = 0
+            for c in r["chunks"]:
+                fpath = os.path.join(self.path, c["file"])
+                if not os.path.isfile(fpath):
+                    raise IndexStoreError(
+                        f"{self.path}: resolution {r['name']} missing chunk "
+                        f"{c['file']}")
+                arr = _read_chunk(fpath, r["dtype"])
+                if arr.ndim != 2 or arr.shape != (c["rows"], rm):
+                    raise IndexStoreError(
+                        f"{self.path}: resolution chunk {c['file']} has "
+                        f"shape {tuple(arr.shape)}, manifest says "
+                        f"({c['rows']}, {rm})")
+                rows += c["rows"]
+            if rows != base_n:
+                raise IndexStoreError(
+                    f"{self.path}: resolution {r['name']} holds {rows} "
+                    f"rows, base segment has {base_n} — the views no "
+                    f"longer describe the same corpus")
+            f = r.get("scale_file")
+            if f is not None and not os.path.isfile(
+                    os.path.join(self.path, f)):
+                raise IndexStoreError(
+                    f"{self.path}: resolution {r['name']} missing scale "
+                    f"blob {f}")
 
     # -- shape -------------------------------------------------------------
     @property
@@ -479,6 +555,66 @@ class IndexStore:
                                      dtype_name=self.manifest["dtype"]))
             offset += int(s["n"])
         return views
+
+    # -- resolutions (multi-resolution cascade artifact) -------------------
+    def resolutions(self) -> list[SegmentView]:
+        """Read handles on every coarse resolution (row-aligned with the
+        base segment; ``dim`` is the resolution's m, ``dtype`` its own
+        storage dtype). ``DenseIndex.load`` works on a view unchanged."""
+        return [SegmentView(store_path=self.path, name=r["name"],
+                            kind="resolution", entry=r, offset=0,
+                            dim=int(r["m"]), dtype_name=r["dtype"])
+                for r in self.manifest.get("resolutions", ())]
+
+    def add_resolution(self, vectors: np.ndarray, *,
+                       scale: np.ndarray | None = None,
+                       chunk_rows: int = 262144) -> str:
+        """Durably attach a coarse resolution: the (base_n, m) leading-
+        column view of the base rows in its storage dtype (int8 rows with
+        their own per-dim ``scale``, or f32). Blob-then-manifest-swap like
+        every other segment mutation; refuses a duplicate m, a non-nested
+        m, or a row count that disagrees with the base segment."""
+        vectors = np.asarray(vectors)
+        if vectors.ndim != 2:
+            raise ValueError(f"add_resolution expects (rows, m), got shape "
+                             f"{tuple(vectors.shape)}")
+        base_n = int(self._segment_entries()[0]["n"])
+        n, m = vectors.shape
+        if n != base_n:
+            raise IndexStoreError(
+                f"{self.path}: resolution has {n} rows, base segment has "
+                f"{base_n}")
+        if not 0 < m < self.dim:
+            raise IndexStoreError(
+                f"{self.path}: resolution m={m} does not nest inside "
+                f"dim={self.dim}")
+        manifest = json.loads(json.dumps(self.manifest))   # deep copy
+        if any(int(r["m"]) == m for r in manifest.get("resolutions", ())):
+            raise IndexStoreError(
+                f"{self.path}: resolution m={m} already present")
+        name = f"m{m}"
+        entry = {"name": name, "m": m,
+                 "dtype": _logical_dtype_name(vectors), "chunks": [],
+                 "scale_file": None}
+        for start in range(0, n, chunk_rows):
+            fname, seq = self._next_blob(f"res_{name}")
+            manifest["blob_seq"] = seq
+            self.manifest["blob_seq"] = seq    # keep the counter monotonic
+            block = vectors[start:min(start + chunk_rows, n)]
+            _write_chunk(os.path.join(self.path, fname), block)
+            entry["chunks"].append({"file": fname,
+                                    "rows": int(block.shape[0])})
+        if scale is not None:
+            fname, seq = self._next_blob(f"scale_{name}")
+            manifest["blob_seq"] = seq
+            self.manifest["blob_seq"] = seq
+            np.save(os.path.join(self.path, fname),
+                    np.asarray(scale, np.float32))
+            fsync_file(os.path.join(self.path, fname))
+            entry["scale_file"] = fname
+        manifest.setdefault("resolutions", []).append(entry)
+        self._swap_manifest(manifest)
+        return name
 
     @property
     def flat_loadable(self) -> bool:

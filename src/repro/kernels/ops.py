@@ -27,17 +27,22 @@ def gram(D: jax.Array, *, block_rows: int = 1024,
 
 def topk_score(D: jax.Array, Q: jax.Array, *, k: int, block_n: int = 1024,
                block_b: int = 128, n_valid: int | None = None,
-               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+               interpret: bool | None = None,
+               row_ids: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array]:
     """Fused score + top-k over a document index shard.
 
     The index streams in its storage dtype (int8 stays int8 — the dequant
     scale must be folded into ``Q``); ``block_b`` tiles the query batch;
     ``n_valid`` masks trailing padding rows out of the results.
+    ``row_ids`` switches to shortlist-rescore mode: each row reports its
+    gathered true doc id (ascending, negative sentinels masked out).
     """
     if interpret is None:
         interpret = _interpret_default()
     return topk_score_pallas(D, Q, k=k, block_n=block_n, block_b=block_b,
-                             n_valid=n_valid, interpret=interpret)
+                             n_valid=n_valid, interpret=interpret,
+                             row_ids=row_ids)
 
 
 def pca_project(D: jax.Array, W: jax.Array, *, block_rows: int = 1024,

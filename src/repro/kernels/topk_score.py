@@ -38,6 +38,16 @@ term made optimal: pruning d→m (and int8) cuts exactly the streamed bytes.
 
 Outputs are sorted descending; ties break toward the smaller doc id
 (matching ``jax.lax.top_k`` first-occurrence semantics).
+
+**Shortlist rescore mode** (``row_ids``): the cascade's second stage scans
+a *gathered* shortlist — rows plucked from the full-resolution index — so
+row position no longer equals doc id. ``row_ids`` streams a (1, U) int32
+id row alongside the strips: the kernel scores position ``j`` but reports
+``row_ids[j]``, and masks ``row_ids[j] < 0`` (dedup/pad sentinels) to
+-inf instead of the ``n_valid`` iota mask. The min-id-among-ties extract
+makes the result independent of gather order, but the block-skip guard's
+skip-on-equality is only exact when ``row_ids`` is ascending (sentinels
+first) — which the cascade's sorted shortlist guarantees.
 """
 from __future__ import annotations
 
@@ -104,18 +114,24 @@ def topk_geometry(n: int, m: int, B: int, k: int, *, block_n: int = 1024,
 
 
 def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int,
-                 fold_w: int, fold_r: int):
+                 fold_w: int, fold_r: int, with_ids: bool = False):
     pad_w = fold_r * fold_w - block_n
 
-    def kernel(q_ref, d_ref, out_s_ref, out_i_ref, run_s_ref, run_i_ref):
+    def kernel(q_ref, d_ref, *refs):
+        if with_ids:
+            ids_ref, out_s_ref, out_i_ref, run_s_ref, run_i_ref = refs
+        else:
+            out_s_ref, out_i_ref, run_s_ref, run_i_ref = refs
         i = pl.program_id(1)   # index strip (minor); program_id(0) = batch tile
 
         @pl.when(i == 0)
         def _init():
             run_s_ref[...] = jnp.full_like(run_s_ref, _NEG)
-            # unique negative ids so id-keyed masking never collides
+            # unique negative ids so id-keyed masking never collides (more
+            # negative than the -1 shortlist sentinels, which DO collide —
+            # but only among themselves, at -inf, where it cannot matter)
             bb = run_i_ref.shape[0]
-            neg = -(jax.lax.broadcasted_iota(jnp.int32, (bb, k), 1) + 1)
+            neg = -(jax.lax.broadcasted_iota(jnp.int32, (bb, k), 1) + 2)
             run_i_ref[...] = neg
 
         q = q_ref[...]
@@ -123,8 +139,15 @@ def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int,
         s = jax.lax.dot_general(
             q, blk, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)               # (bb, block_n)
-        gids = i * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(gids < n_valid, s, _NEG)
+        if with_ids:
+            # rescore mode: report the gathered rows' true doc ids; negative
+            # ids mark dedup/pad slots and never surface
+            gids = jnp.broadcast_to(ids_ref[...], s.shape)
+            s = jnp.where(gids >= 0, s, _NEG)
+        else:
+            gids = i * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape,
+                                                          1)
+            s = jnp.where(gids < n_valid, s, _NEG)
 
         # Block-skip guard: merge only if this strip can improve the top-k.
         blk_max = jnp.max(s)
@@ -181,7 +204,8 @@ def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int,
                                              "n_valid", "interpret"))
 def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
                       block_n: int = 1024, block_b: int = 128,
-                      n_valid: int | None = None, interpret: bool = True
+                      n_valid: int | None = None, interpret: bool = True,
+                      row_ids: jax.Array | None = None
                       ) -> tuple[jax.Array, jax.Array]:
     """Fused exact search: top-k of ``Q @ D^T`` per query row.
 
@@ -191,6 +215,10 @@ def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
        exceed what fits VMEM-resident alongside an index strip.
     ``n_valid``: logical row count; rows with id >= n_valid (e.g. device
        padding in a sharded index) never surface in results.
+    ``row_ids``: optional (n,) int32 true doc id per row — rescore mode for
+       a gathered shortlist. Ids must be ascending (negative dedup/pad
+       sentinels first); rows with a negative id are masked out and
+       ``n_valid`` is ignored.
     Returns (scores (B, k) f32 sorted desc, ids (B, k) int32; -1 pads).
     """
     n, m = D.shape
@@ -203,14 +231,25 @@ def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
     if g.b_pad != B:
         Qf = jnp.pad(Qf, ((0, g.b_pad - B), (0, 0)))
 
-    kernel = _make_kernel(k, nv, g.block_n, g.nblocks, g.fold_w, g.fold_r)
+    kernel = _make_kernel(k, nv, g.block_n, g.nblocks, g.fold_w, g.fold_r,
+                          with_ids=row_ids is not None)
+    in_specs = [
+        pl.BlockSpec((g.block_b, m), lambda b, i: (b, 0)),  # Q resident
+        pl.BlockSpec((g.block_n, m), lambda b, i: (i, 0)),  # D streams
+    ]
+    operands = [Qf, D]
+    if row_ids is not None:
+        ids = row_ids.astype(jnp.int32).reshape(1, n)
+        if g.pad_rows:
+            ids = jnp.pad(ids, ((0, 0), (0, g.pad_rows)),
+                          constant_values=-1)
+        in_specs.append(
+            pl.BlockSpec((1, g.block_n), lambda b, i: (0, i)))  # ids stream
+        operands.append(ids)
     out_s, out_i = pl.pallas_call(
         kernel,
         grid=g.grid,
-        in_specs=[
-            pl.BlockSpec((g.block_b, m), lambda b, i: (b, 0)),  # Q resident
-            pl.BlockSpec((g.block_n, m), lambda b, i: (i, 0)),  # D streams
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((g.block_b, k), lambda b, i: (b, 0)),
             pl.BlockSpec((g.block_b, k), lambda b, i: (b, 0)),
@@ -224,7 +263,7 @@ def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
             _scratch((g.block_b, k), jnp.int32),
         ],
         interpret=interpret,
-    )(Qf, D)
+    )(*operands)
     return out_s[:B], out_i[:B]
 
 

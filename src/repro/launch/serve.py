@@ -46,6 +46,15 @@ live-index lifecycle under traffic, zero steady-state recompiles.
 {8, 16, …, max_batch} instead of always max_batch (less pad compute at
 low load for a handful of extra compiles).
 
+``--cascade M:N`` serves through a two-resolution ``CascadeIndex``:
+a coarse scan over the first M PCA dims (int8) keeps N·k candidates per
+query, then one small exact rescore at full m picks the final top-k —
+bit-identical to the single-resolution search whenever N·k >= n, ~24x
+fewer scanned bytes otherwise. Composes with ``--live-append`` (both
+resolutions grow and swap as one object) and ``--save-index`` /
+``--load-index`` (the coarse view rides the same store as a
+``resolutions`` manifest entry); ``--sharded`` is not supported.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n-docs 50000 --dim 256 \
       --cutoff 0.5 --queries 256 --batch 32
@@ -63,6 +72,11 @@ Examples:
                                  # atomic swaps, final mid-serve compaction
   PYTHONPATH=src python -m repro.launch.serve --bucket-batches \
       --open-loop 50             # low load: pad to {8,16,32}, not max_batch
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 100000 --dim 768 \
+      --cascade 64:8             # coarse m=64 int8 scan -> exact rescore
+  PYTHONPATH=src python -m repro.launch.serve --cascade 64:8 \
+      --live-append 300          # cascade + live appends: both resolutions
+                                 # grow and swap atomically as one object
 """
 from __future__ import annotations
 
@@ -76,7 +90,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DenseIndex, IndexStore, ShardedDenseIndex, StaticPruner
+from repro.core import (CascadeIndex, DenseIndex, IndexStore,
+                        ShardedDenseIndex, StaticPruner)
 from repro.core.store import save_index
 from repro.data.synthetic import make_dataset
 from repro.util import force_host_device_count
@@ -626,6 +641,11 @@ def main() -> None:
                     help="sharded candidate merge: one all-gather over "
                          "every device, or two stages over a factored mesh")
     ap.add_argument("--quantize-int8", action="store_true")
+    ap.add_argument("--cascade", default=None, metavar="M:N",
+                    help="serve a two-resolution cascade: coarse scan over "
+                         "the first M PCA dims (int8) keeps N*k candidates "
+                         "per query, then one exact full-m rescore of the "
+                         "shortlist (e.g. 64:8)")
     ap.add_argument("--save-index", default=None, metavar="DIR",
                     help="persist the built artifact (PCA state + pruned "
                          "vectors + int8 scale) to DIR for later "
@@ -637,6 +657,18 @@ def main() -> None:
     args = ap.parse_args()
     if args.save_index and args.load_index:
         ap.error("--save-index and --load-index are mutually exclusive")
+    cascade_mn = None
+    if args.cascade:
+        if args.sharded:
+            ap.error("--cascade does not compose with --sharded yet "
+                     "(sharded base rescore: see ROADMAP)")
+        try:
+            mc_s, nf_s = args.cascade.split(":")
+            cascade_mn = (int(mc_s), int(nf_s))
+        except ValueError:
+            ap.error(f"--cascade wants M:N (e.g. 64:8), got {args.cascade!r}")
+        if cascade_mn[0] < 1 or cascade_mn[1] < 1:
+            ap.error("--cascade M and N must both be >= 1")
 
     force_host_device_count(args.host_devices or (4 if args.sharded else 0))
 
@@ -670,6 +702,15 @@ def main() -> None:
                   f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "
                   f"({index.nbytes/2**20:.1f} MiB, backend={args.backend}, "
                   f"merge={args.merge})")
+        elif cascade_mn:
+            index = CascadeIndex.load(store, m_coarse=cascade_mn[0],
+                                      n_factor=cascade_mn[1],
+                                      backend=args.backend,
+                                      segmented=args.live_append > 0,
+                                      delta_capacity=args.delta_capacity)
+            print(f"[serve] loaded cascade: {index.n} x {index.dim} "
+                  f"(+ coarse m={index.m_coarse}, shortlist "
+                  f"{index.n_factor}*k, {index.nbytes/2**20:.1f} MiB)")
         else:
             index = DenseIndex.load(store, backend=args.backend)
             print(f"[serve] loaded index: {index.n} x {index.dim} "
@@ -704,6 +745,14 @@ def main() -> None:
                   f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
                   f"({index.nbytes/2**20:.1f} MiB, backend={args.backend}, "
                   f"merge={args.merge})")
+        elif cascade_mn:
+            index = CascadeIndex.build(pruned, m_coarse=cascade_mn[0],
+                                       n_factor=cascade_mn[1],
+                                       quantize_int8=args.quantize_int8,
+                                       backend=args.backend)
+            print(f"[serve] cascade index: {index.n} x {index.dim} "
+                  f"(+ coarse m={index.m_coarse} int8, shortlist "
+                  f"{index.n_factor}*k, {index.nbytes/2**20:.1f} MiB)")
         else:
             index = DenseIndex.build(pruned, quantize_int8=args.quantize_int8,
                                      backend=args.backend)
@@ -719,9 +768,45 @@ def main() -> None:
                                  bucket_batches=args.bucket_batches)
 
     updater = None
+    cascade_app = None
     append_stop = threading.Event()
     appender = None
-    if args.live_append > 0:
+    if args.live_append > 0 and cascade_mn:
+        # CascadeIndex is copy-on-write: append grows BOTH resolutions and
+        # swap_index installs the consistent pair atomically. IndexUpdater
+        # is SegmentedIndex-specific, so the cascade drives the same
+        # swap-between-batches discipline directly; only this thread ever
+        # rebinds the local, so no extra lock is needed.
+        from repro.core import SegmentedIndex
+        if not isinstance(index.full, SegmentedIndex):
+            index = index.segmented(delta_capacity=args.delta_capacity)
+        server.swap_index(index)
+        rng_app = np.random.default_rng(123)
+        app_block = 64
+        cascade_app = {"rows": 0, "index": index}
+
+        def _appender():
+            cas = cascade_app["index"]
+            while not append_stop.is_set():
+                t0 = time.perf_counter()
+                block = jnp.asarray(
+                    rng_app.standard_normal((app_block, args.dim))
+                    .astype(np.float32))
+                cas = cas.append(pruner.prune_index(block))
+                server.swap_index(cas)
+                cascade_app["rows"] += app_block
+                cascade_app["index"] = cas
+                delay = (app_block / args.live_append
+                         - (time.perf_counter() - t0))
+                if delay > 0:
+                    append_stop.wait(delay)
+
+        appender = threading.Thread(target=_appender, daemon=True)
+        print(f"[serve] live-append (cascade): {args.live_append:.0f} "
+              f"rows/s (blocks of {app_block}, delta capacity "
+              f"{args.delta_capacity})")
+        appender.start()
+    elif args.live_append > 0:
         from repro.core import SegmentedIndex
         from repro.core.maintenance import IndexUpdater
         seg = SegmentedIndex.from_index(index,
@@ -778,6 +863,14 @@ def main() -> None:
               f"worker={ostats['worker_qps']:.1f} qps "
               f"({ostats['occupancy']*100:.0f}% occupancy)")
 
+    if cascade_app is not None:
+        append_stop.set()
+        appender.join(timeout=30.0)
+        cas = cascade_app["index"]
+        print(f"[serve] live-append (cascade): +{cascade_app['rows']} rows "
+              f"in {len(cas.full.deltas)} delta segment(s) per resolution, "
+              f"{server.swap_count} atomic swaps; index now {cas.n} rows "
+              f"(both resolutions)")
     if updater is not None:
         append_stop.set()
         appender.join(timeout=30.0)
