@@ -3,8 +3,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import DenseIndex
 from repro.core.metrics import evaluate_run

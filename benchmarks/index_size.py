@@ -1,8 +1,8 @@
 """Index space-occupancy table: O(mn + md) vs O(dn) (paper §2)."""
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import DenseIndex, StaticPruner
 

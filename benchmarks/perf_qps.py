@@ -24,9 +24,9 @@ import threading
 import time
 from functools import partial
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
 from repro.core.index import _scan_topk, _topk_merge
@@ -429,7 +429,7 @@ def _live_index(Dh, pruner, Q_raw, emit) -> dict:
             n0 = up.index.n
             stop = threading.Event()
 
-            def appender():
+            def appender(arate=arate):
                 while not stop.is_set():
                     t0 = time.perf_counter()
                     up.add_documents(jnp.asarray(

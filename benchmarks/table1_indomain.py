@@ -7,11 +7,10 @@ min(10^5, corpus) in-domain embeddings.
 """
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import (CUTOFFS, METRICS, QUERY_SETS, eval_system,
-                               fmt_cell, load_all_datasets)
+from benchmarks.common import CUTOFFS, METRICS, QUERY_SETS, eval_system, fmt_cell, load_all_datasets
 from repro.core import StaticPruner
 from repro.core.metrics import wilcoxon_significant
 

@@ -3,8 +3,16 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import (CUTOFFS, METRICS, QUERY_SETS, eval_system,
-                               fmt_cell, load_all_datasets, N_DOCS, DIM)
+from benchmarks.common import (
+    CUTOFFS,
+    DIM,
+    METRICS,
+    N_DOCS,
+    QUERY_SETS,
+    eval_system,
+    fmt_cell,
+    load_all_datasets,
+)
 from repro.core import StaticPruner
 from repro.core.metrics import wilcoxon_significant
 from repro.data.synthetic import make_ood_corpus

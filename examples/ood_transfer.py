@@ -2,8 +2,8 @@
 
   PYTHONPATH=src python examples/ood_transfer.py
 """
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import DenseIndex, StaticPruner
 from repro.core.metrics import evaluate_run, mean_metrics, wilcoxon_significant

@@ -8,8 +8,8 @@ public API: offline artefacts -> batching server -> concurrent clients.
 import threading
 import time
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import DenseIndex, StaticPruner
 from repro.data.synthetic import make_dataset

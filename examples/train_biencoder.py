@@ -10,16 +10,15 @@ BERT-base-scale (110M param) config (same code path — sized for a TPU pod).
 import argparse
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.core import DenseIndex, StaticPruner
 from repro.core.metrics import evaluate_run, mean_metrics
-from repro.checkpoint import CheckpointManager
 from repro.data.tokens import Prefetcher, pair_batch
-from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
-                                    init_biencoder)
+from repro.models.biencoder import BiEncoderConfig, contrastive_loss, encode, init_biencoder
 from repro.optim import adamw_init, adamw_update, warmup_cosine
 
 

@@ -15,12 +15,26 @@ type system enforces, so each gets a dedicated static analyzer:
     config from the kernels' own shared geometry, grid divisibility and
     index-map bounds from the *traced* ``pallas_call``, rejected against a
     configurable per-core budget.
-  * ``concurrency``   — an AST pass over the serving tier that builds the
-    guarded-field map per class, flags fields accessed both under and
-    outside their lock, detects lock-acquisition-order cycles, and flags
-    blocking device calls while a lock is held.
+  * ``concurrency``   — an AST pass over the whole ``repro`` tree that
+    builds the guarded-field map per class, flags fields accessed both
+    under and outside their lock, detects lock-acquisition-order cycles,
+    and flags blocking device calls while a lock is held.
+  * ``cost_model``    — a jaxpr cost walk of every serving entry point:
+    per-query FLOPs, HBM bytes (storage-dtype aware), and arithmetic
+    intensity, gated against the checked-in ``analysis_costs.json``
+    baseline with per-metric tolerances and cross-checked against the
+    measured qps ordering in ``BENCH_perf.json``.
+  * ``invariants``    — an abstract interpreter over the traced serving
+    jaxprs proving the value contracts the kernels rely on: shortlist
+    ids sorted into the block-skip guard, ``-1`` padding masked to
+    ``-inf`` before final top-k, dedup keeping the lowest id on score
+    ties, and disjoint global-id intervals across segment dispatches.
+  * ``lock_sanitizer`` — happens-before handoff analysis (consumer
+    blocking on a channel while holding the producer's lock) plus a
+    runtime lock-order recorder whose observed graph CI cross-checks
+    against the static acquisition graph.
 
-``python -m repro.analysis`` runs all three against the live repo code,
+``python -m repro.analysis`` runs all six against the live repo code,
 emits a machine-readable JSON report, subtracts the checked-in suppression
 baseline (``analysis_baseline.json``), and exits nonzero on any
 unsuppressed finding — the CI gate for the 2-6x wins in BENCH_perf.json.

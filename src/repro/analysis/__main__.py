@@ -1,8 +1,8 @@
 """CLI gate: ``python -m repro.analysis [--fail-on-findings]``.
 
-Runs the three analyzers against the live repo code, subtracts the
-checked-in suppression baseline, writes the machine-readable report, and
-(with ``--fail-on-findings``) exits 1 on any unsuppressed error-severity
+Runs the analyzers against the live repo code, subtracts the checked-in
+suppression baseline, writes the machine-readable report, and (with
+``--fail-on-findings``) exits 1 on any unsuppressed error-severity
 finding or stale suppression. This is the CI entry point.
 """
 from __future__ import annotations
@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-ANALYZERS = ("jaxpr", "pallas", "conc")
+ANALYZERS = ("jaxpr", "pallas", "conc", "cost", "inv", "locks")
 
 
 def main(argv=None) -> int:
@@ -24,6 +24,19 @@ def main(argv=None) -> int:
                     help="report output path ('' disables)")
     ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
                     help="override the Pallas per-core VMEM budget")
+    ap.add_argument("--costs", default="analysis_costs.json",
+                    help="checked-in cost baseline for the cost analyzer")
+    ap.add_argument("--bench", default="BENCH_perf.json",
+                    help="benchmark results for the cost cross-check "
+                         "(missing file = cross-check skipped)")
+    ap.add_argument("--write-cost-baseline", action="store_true",
+                    help="re-measure every entry point and rewrite --costs "
+                         "instead of gating against it")
+    ap.add_argument("--lock-graph", default=None, metavar="PATH",
+                    help="observed runtime lock graph (LOCK_graph.json) to "
+                         "cross-check against the static acquisition graph")
+    ap.add_argument("--lock-graph-out", default=None, metavar="PATH",
+                    help="write the STATIC lock graph to PATH (artifact)")
     ap.add_argument("--fail-on-findings", action="store_true",
                     help="exit 1 on unsuppressed error findings or stale "
                          "suppressions")
@@ -33,6 +46,12 @@ def main(argv=None) -> int:
     unknown = set(chosen) - set(ANALYZERS)
     if unknown:
         ap.error(f"unknown analyzer(s): {sorted(unknown)}")
+
+    if args.write_cost_baseline:
+        from repro.analysis import cost_model
+        cost_model.write_baseline(args.costs, cost_model.measure_all())
+        print(f"[analysis] cost baseline -> {args.costs}")
+        return 0
 
     findings = []
     if "jaxpr" in chosen:
@@ -46,10 +65,28 @@ def main(argv=None) -> int:
     if "conc" in chosen:
         from repro.analysis import concurrency
         findings += concurrency.run()
+    if "cost" in chosen:
+        from repro.analysis import cost_model
+        findings += cost_model.run(costs_path=args.costs,
+                                   bench_path=args.bench)
+    if "inv" in chosen:
+        from repro.analysis import invariants
+        findings += invariants.run()
+    if "locks" in chosen:
+        from repro.analysis import lock_sanitizer
+        findings += lock_sanitizer.run(lock_graph_path=args.lock_graph)
+        if args.lock_graph_out:
+            import json
+            from pathlib import Path
+            Path(args.lock_graph_out).write_text(
+                json.dumps(lock_sanitizer.static_lock_graph(),
+                           indent=1, sort_keys=True) + "\n")
+            print(f"[analysis] static lock graph -> {args.lock_graph_out}")
 
     from repro.analysis.report import (apply_baseline, format_text,
                                        load_baseline, write_report)
-    report = apply_baseline(findings, load_baseline(args.baseline))
+    report = apply_baseline(findings, load_baseline(args.baseline),
+                            active_analyzers=chosen)
     if args.json:
         write_report(report, args.json)
         print(f"[analysis] report -> {args.json}")

@@ -75,6 +75,8 @@ class CallSite:
     held: frozenset
     target: str                # bare method name being invoked
     via_self: bool             # self._m() vs self.field._m()
+    owner: str | None = None   # field name for self.field._m() calls
+    bounded: bool = False      # call passes args/timeout (cannot block forever)
 
 
 @dataclasses.dataclass
@@ -230,10 +232,14 @@ class _ClassScanner:
                         and owner not in info.selfsync):
                     info.accesses.append(Access(method, owner, "write",
                                                 held))
+                bounded = bool(node.args) or any(
+                    kw.arg in ("timeout", "block") for kw in node.keywords)
                 if isinstance(fn.value, ast.Name) and fn.value.id == "self":
-                    info.calls.append(CallSite(method, held, fn.attr, True))
+                    info.calls.append(CallSite(method, held, fn.attr, True,
+                                               None, bounded))
                 elif owner is not None:
-                    info.calls.append(CallSite(method, held, fn.attr, False))
+                    info.calls.append(CallSite(method, held, fn.attr, False,
+                                               owner, bounded))
             dotted = _dotted(fn)
             tail = dotted.rsplit(".", 1)[-1] if dotted else (
                 fn.attr if isinstance(fn, ast.Attribute) else None)
@@ -309,10 +315,10 @@ def field_findings(info: ClassInfo) -> list[Finding]:
     return findings
 
 
-def lock_order_findings(infos: Sequence[ClassInfo]) -> list[Finding]:
-    """Directed acquisition graph over qualified locks; cycles are
-    potential deadlocks. Interprocedural edges resolve called method
-    names against every analysed class."""
+def acquisition_edges(infos: Sequence[ClassInfo]) -> dict[str, set]:
+    """Directed acquisition graph over qualified locks (``Class.lock``
+    held -> acquired), including interprocedural edges through calls to
+    known methods of the analysed classes."""
     by_method: dict[str, list[tuple[ClassInfo, set]]] = {}
     for info in infos:
         for m in info.methods:
@@ -326,7 +332,7 @@ def lock_order_findings(infos: Sequence[ClassInfo]) -> list[Finding]:
             edges.setdefault(a, set()).add(b)
 
     for info in infos:
-        for method, held, lock in info.acquisitions:
+        for _method, held, lock in info.acquisitions:
             for h in held:
                 _edge(f"{info.name}.{h}", f"{info.name}.{lock}")
         for c in info.calls:
@@ -339,9 +345,13 @@ def lock_order_findings(infos: Sequence[ClassInfo]) -> list[Finding]:
                     for h in c.held:
                         _edge(f"{info.name}.{h}",
                               f"{target_info.name}.{l}")
+    return edges
 
+
+def lock_order_findings(infos: Sequence[ClassInfo]) -> list[Finding]:
+    """Cycles in the acquisition graph are potential deadlocks."""
+    edges = acquisition_edges(infos)
     findings, seen = [], set()
-    module = infos[0].module if infos else "?"
 
     def _dfs(n, stack, on_stack):
         for nxt in sorted(edges.get(n, ())):
@@ -366,7 +376,6 @@ def lock_order_findings(infos: Sequence[ClassInfo]) -> list[Finding]:
         if n not in visited:
             visited.add(n)
             _dfs(n, [n], {n})
-    del module
     return findings
 
 
@@ -402,7 +411,23 @@ TARGETS = (("repro.launch.serve", "launch/serve.py"),
            ("repro.core.maintenance", "core/maintenance.py"))
 
 
-def run() -> list[Finding]:
+def source_targets() -> list[tuple[str, Path]]:
+    """(dotted-module, path) for every module in the ``repro`` tree,
+    excluding the analysis package itself (its fixtures are deliberately
+    broken and its passes are not serving code)."""
     import repro
     root = Path(next(iter(repro.__path__)))   # namespace package
-    return analyze([(mod, root / rel) for mod, rel in TARGETS])
+    targets = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root)
+        if rel.parts[0] == "analysis":
+            continue
+        dotted = ".".join(("repro",) + rel.parts[:-1]
+                          + (() if rel.name == "__init__.py"
+                             else (rel.stem,)))
+        targets.append((dotted, path))
+    return targets
+
+
+def run() -> list[Finding]:
+    return analyze(source_targets())

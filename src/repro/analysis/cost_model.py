@@ -1,0 +1,453 @@
+"""Static per-query cost model over the serving entry points.
+
+The paper's trade is *static*: prune dimensions once, serve cheaper
+forever — so the quantity worth gating is exactly the one the pruning
+changes, bytes and FLOPs per query, and it can be priced without running a
+single query. Every serving entry point from
+``jaxpr_lints.serving_entry_points()`` is traced (``jax.make_jaxpr``, no
+device execution) and its jaxpr is walked into a roofline-style cost:
+
+  * **FLOPs** — ``dot_general`` priced from its dimension numbers
+    (2·batch·M·N·K), reductions/argmax by operand size, ``sort`` as
+    n·log n, ``top_k`` as n·log k, element-wise by output size; ``scan``
+    bodies multiply by trip count, ``pallas_call`` kernels by grid size,
+    ``cond`` takes the max branch, ``shard_map`` multiplies by mesh size.
+  * **HBM bytes** — each top-level compute dispatch reads its operands and
+    writes its outputs at their *storage* width (an int8 index prices at
+    1 byte/elem — the whole point), plus materialisation traffic: any
+    copy-like eqn (``convert_element_type``/``gather``/``sort``/…) whose
+    output is strictly larger than one dequant strip prices a full
+    write+read round trip. A f32 shadow copy of an int8 corpus therefore
+    shows up as ~8x the bytes even though the jaxpr still "works".
+  * **arithmetic intensity** — FLOPs / HBM bytes, the roofline position.
+
+Costs are gated against the checked-in ``analysis_costs.json``: dispatch
+counts exactly, FLOPs/bytes within per-metric tolerances (regression =
+error, improvement beyond tolerance = warn: re-baseline), intensity drift
+warns. Entries traced under a different device topology than they were
+baselined with (the sharded family embeds the mesh) are skipped rather
+than mis-gated. Finally the model is cross-checked against reality: where
+two entries model the same ``BENCH_perf.json`` serve config family, the
+predicted bytes/query ordering must agree with the measured worker-qps
+ordering (memory-bound ⇒ fewer bytes = more qps), else
+``cost.bench-mismatch`` warns.
+
+Re-baseline after an intentional perf change with
+``python -m repro.analysis --write-cost-baseline``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.analysis import Finding
+from repro.analysis.jaxpr_lints import _DISPATCH_PRIMS, _contains_compute, _eqn_subjaxprs
+
+COSTS_SCHEMA = "repro.analysis/costs-v1"
+
+# gated metrics: exact for dispatches, relative tolerance otherwise.
+# Tolerances absorb cross-JAX-version jaxpr drift (fused vs split
+# elementwise chains), NOT real regressions: a shadow copy or an extra
+# dispatch moves bytes by integer factors.
+METRIC_TOL = {
+    "flops_per_query": 0.10,
+    "hbm_read_bytes_per_query": 0.10,
+    "hbm_write_bytes_per_query": 0.10,
+}
+INTENSITY_TOL = 0.15
+METRIC_KEYS = ("dispatches", "flops_per_query", "hbm_read_bytes_per_query",
+               "hbm_write_bytes_per_query", "arithmetic_intensity")
+
+# copy-like primitives whose oversized outputs price a materialisation
+# round trip (write + read back) — the shadow-copy detectors
+_MATERIALIZE_PRIMS = frozenset({
+    "convert_element_type", "gather", "sort", "concatenate", "pad",
+    "scatter", "dynamic_update_slice", "copy",
+})
+# shape plumbing that moves no bytes and does no arithmetic
+_FREE_PRIMS = frozenset({
+    "reshape", "broadcast_in_dim", "squeeze", "transpose", "slice",
+    "dynamic_slice", "iota", "stop_gradient", "convert_element_type",
+    "gather", "concatenate", "pad", "scatter", "dynamic_update_slice",
+    "copy", "split",
+})
+_REDUCE_PRIMS = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "argmax",
+    "argmin", "reduce_and", "reduce_or", "reduce_precision",
+})
+
+
+def _elems(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _nbytes(aval) -> int:
+    return _elems(aval) * np.dtype(aval.dtype).itemsize
+
+
+def _dot_general_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    batch = math.prod(lhs[i] for i in lb)
+    contract = math.prod(lhs[i] for i in lc)
+    lfree = math.prod(d for i, d in enumerate(lhs)
+                      if i not in tuple(lc) + tuple(lb))
+    rfree = math.prod(d for i, d in enumerate(rhs)
+                      if i not in tuple(rc) + tuple(rb))
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def _prim_flops(eqn) -> float:
+    name = eqn.primitive.name
+    if name == "dot_general":
+        return _dot_general_flops(eqn)
+    if name in _REDUCE_PRIMS:
+        return float(max((_elems(v.aval) for v in eqn.invars), default=0))
+    if name == "sort":
+        aval = eqn.invars[0].aval
+        axis = aval.shape[eqn.params.get("dimension", -1)] \
+            if aval.shape else 1
+        return float(_elems(aval)) * max(1, math.ceil(math.log2(max(2,
+                                                                    axis))))
+    if name == "top_k":
+        aval = eqn.invars[0].aval
+        k = eqn.params.get("k", 1)
+        return float(_elems(aval)) * max(1, math.ceil(math.log2(k + 1)))
+    if name in _FREE_PRIMS:
+        return 0.0
+    # default: element-wise over the (largest) output
+    return float(max((_elems(v.aval) for v in eqn.outvars), default=0))
+
+
+def _grid_prod(eqn) -> int:
+    gm = eqn.params.get("grid_mapping")
+    grid = getattr(gm, "grid", None) or eqn.params.get("grid") or ()
+    try:
+        return int(math.prod(int(g) for g in grid)) or 1
+    except (TypeError, ValueError):
+        return 1
+
+
+def _walk_cost(jaxpr, threshold_elems: int) -> tuple[float, float]:
+    """(flops, materialisation bytes) of one jaxpr, multipliers applied."""
+    flops = 0.0
+    mat = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            mult = int(eqn.params.get("length", 1))
+            for j in _eqn_subjaxprs(eqn):
+                f, b = _walk_cost(j, threshold_elems)
+                flops += mult * f
+                mat += mult * b
+            continue
+        if name == "cond":
+            best = (0.0, 0.0)
+            for j in _eqn_subjaxprs(eqn):
+                c = _walk_cost(j, threshold_elems)
+                if c[0] + c[1] > best[0] + best[1]:
+                    best = c
+            flops += best[0]
+            mat += best[1]
+            continue
+        if name == "pallas_call":
+            mult = _grid_prod(eqn)
+            for j in _eqn_subjaxprs(eqn):
+                f, b = _walk_cost(j, threshold_elems)
+                flops += mult * f
+                mat += mult * b
+            continue
+        if name == "shard_map":
+            mesh = eqn.params.get("mesh")
+            mult = int(getattr(mesh, "size", 1) or 1)
+            for j in _eqn_subjaxprs(eqn):
+                f, b = _walk_cost(j, threshold_elems)
+                flops += mult * f
+                mat += mult * b
+            continue
+        subs = list(_eqn_subjaxprs(eqn))
+        if subs:                                 # pjit, custom_*_call, …
+            for j in subs:
+                f, b = _walk_cost(j, threshold_elems)
+                flops += f
+                mat += b
+            continue
+        flops += _prim_flops(eqn)
+        if name in _MATERIALIZE_PRIMS:
+            out = max((_elems(v.aval) for v in eqn.outvars), default=0)
+            if out > threshold_elems:            # strictly larger than a
+                big = max(eqn.outvars, key=lambda v: _elems(v.aval))
+                mat += 2.0 * _nbytes(big.aval)   # strip: write + read back
+    return flops, mat
+
+
+def measure_entry(ep) -> dict:
+    """Price one ``EntryPoint``: trace and walk its jaxpr."""
+    jaxpr = jax.make_jaxpr(ep.fn)(*ep.args).jaxpr
+    n, m = ep.corpus_shape
+    strip = ep.strip_rows if ep.strip_rows else n
+    threshold = min(strip, n) * m
+    reads = writes = 0.0
+    flops = mat = 0.0
+    dispatches = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in _DISPATCH_PRIMS and _contains_compute(eqn):
+            dispatches += 1
+            reads += sum(_nbytes(v.aval) for v in eqn.invars
+                         if hasattr(v, "aval"))
+            writes += sum(_nbytes(v.aval) for v in eqn.outvars)
+            f, b = _walk_cost_eqn(eqn, threshold)
+            flops += f
+            mat += b
+    B = max(1, ep.batch)
+    read_q = (reads + mat) / B
+    write_q = (writes + mat) / B
+    total = read_q + write_q
+    return {
+        "device_count": (jax.device_count()
+                         if ep.family == "sharded" else None),
+        "dispatches": dispatches,
+        "flops_per_query": flops / B,
+        "hbm_read_bytes_per_query": read_q,
+        "hbm_write_bytes_per_query": write_q,
+        "arithmetic_intensity": (flops / B) / total if total else 0.0,
+        "family": ep.family,
+        "bench_key": ep.bench_key,
+    }
+
+
+def _walk_cost_eqn(eqn, threshold_elems):
+    flops = mat = 0.0
+    if eqn.primitive.name == "pallas_call":
+        mult = _grid_prod(eqn)
+    else:
+        mult = 1
+    for j in _eqn_subjaxprs(eqn):
+        f, b = _walk_cost(j, threshold_elems)
+        flops += mult * f
+        mat += mult * b
+    return flops, mat
+
+
+def measure_all(entries=None) -> dict[str, dict]:
+    if entries is None:
+        from repro.analysis.jaxpr_lints import serving_entry_points
+        entries = serving_entry_points()
+    return {ep.label: measure_entry(ep) for ep in entries}
+
+
+# ---------------------------------------------------------------------------
+# baseline file
+# ---------------------------------------------------------------------------
+
+
+def check_costs_schema(doc: dict) -> None:
+    """Validate ``analysis_costs.json`` before it gates anything (or is
+    written) — benchmarks/run.py style: SystemExit naming what's missing."""
+    if not isinstance(doc, dict) or doc.get("schema") != COSTS_SCHEMA:
+        raise SystemExit(f"analysis_costs.json schema: expected "
+                         f"'{COSTS_SCHEMA}', got "
+                         f"{doc.get('schema') if isinstance(doc, dict) else type(doc).__name__!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict) or not entries:
+        raise SystemExit("analysis_costs.json schema: missing or empty "
+                         "'entries' section")
+    for label, row in entries.items():
+        if not isinstance(row, dict):
+            raise SystemExit(f"analysis_costs.json: entry '{label}' is not "
+                             f"an object")
+        missing = [k for k in METRIC_KEYS if k not in row]
+        if missing:
+            raise SystemExit(f"analysis_costs.json: entry '{label}' missing "
+                             f"keys {missing}")
+        if "device_count" not in row:
+            raise SystemExit(f"analysis_costs.json: entry '{label}' missing "
+                             f"'device_count' (null = device-independent)")
+        for key in ("family", "bench_key"):
+            if key not in row:
+                raise SystemExit(f"analysis_costs.json: entry '{label}' "
+                                 f"missing '{key}'")
+        bad = [k for k in METRIC_KEYS
+               if not isinstance(row[k], (int, float))]
+        if bad:
+            raise SystemExit(f"analysis_costs.json: entry '{label}' has "
+                             f"non-numeric metrics {bad}")
+
+
+def write_baseline(path, measured: dict[str, dict]) -> None:
+    doc = {
+        "schema": COSTS_SCHEMA,
+        "_comment": ("Per-query static cost baseline over the serving "
+                     "entry points (see repro/analysis/cost_model.py). "
+                     "Regenerate after an INTENTIONAL perf change with: "
+                     "python -m repro.analysis --write-cost-baseline"),
+        "entries": {
+            label: {k: v for k, v in row.items()
+                    if not k.startswith("_")}
+            for label, row in sorted(measured.items())
+        },
+    }
+    check_costs_schema(doc)
+    pathlib.Path(path).write_text(json.dumps(doc, indent=2, sort_keys=True)
+                                  + "\n")
+
+
+def compare_costs(measured: dict[str, dict], baseline_doc: dict | None,
+                  costs_path="analysis_costs.json") -> list[Finding]:
+    findings: list[Finding] = []
+    if not baseline_doc:
+        return [Finding(
+            check="cost.no-baseline", where=str(costs_path),
+            message=(f"no cost baseline at {costs_path} — run "
+                     f"'python -m repro.analysis --write-cost-baseline' "
+                     f"and commit the file"))]
+    check_costs_schema(baseline_doc)
+    base = baseline_doc["entries"]
+    dc = jax.device_count()
+    for label in sorted(set(base) - set(measured)):
+        findings.append(Finding(
+            check="cost.stale-entry", where=label,
+            message=(f"cost baseline entry '{label}' matches no traced "
+                     f"entry point — it was removed or renamed; "
+                     f"re-baseline to drop it")))
+    for label, row in sorted(measured.items()):
+        if label not in base:
+            findings.append(Finding(
+                check="cost.unbaselined", where=label,
+                message=(f"{label}: no cost baseline entry — a new serving "
+                         f"entry point must be priced and committed "
+                         f"(--write-cost-baseline)")))
+            continue
+        want = base[label]
+        if want.get("device_count") is not None \
+                and want["device_count"] != dc:
+            continue        # sharded entries embed the mesh; wrong topology
+        if row["dispatches"] != want["dispatches"]:
+            findings.append(Finding(
+                check="cost.regression", where=f"{label}:dispatches",
+                message=(f"{label}: {row['dispatches']} compute dispatches "
+                         f"vs baseline {want['dispatches']} — dispatch "
+                         f"count is gated exactly")))
+        for metric, tol in METRIC_TOL.items():
+            got, ref = float(row[metric]), float(want[metric])
+            if ref <= 0:
+                continue
+            rel = (got - ref) / ref
+            if rel > tol:
+                findings.append(Finding(
+                    check="cost.regression", where=f"{label}:{metric}",
+                    message=(f"{label}: {metric} {got:,.0f} is "
+                             f"{rel * 100:.1f}% above baseline {ref:,.0f} "
+                             f"(tolerance {tol * 100:.0f}%) — the static "
+                             f"pruning win is being spent")))
+            elif rel < -tol:
+                findings.append(Finding(
+                    check="cost.improved", where=f"{label}:{metric}",
+                    message=(f"{label}: {metric} {got:,.0f} is "
+                             f"{-rel * 100:.1f}% below baseline {ref:,.0f} "
+                             f"— nice; re-baseline to lock it in"),
+                    severity="warn"))
+        got_i, ref_i = (float(row["arithmetic_intensity"]),
+                        float(want["arithmetic_intensity"]))
+        if ref_i > 0 and abs(got_i - ref_i) / ref_i > INTENSITY_TOL:
+            findings.append(Finding(
+                check="cost.intensity-drift",
+                where=f"{label}:arithmetic_intensity",
+                message=(f"{label}: arithmetic intensity {got_i:.2f} "
+                         f"drifted >{INTENSITY_TOL * 100:.0f}% from "
+                         f"baseline {ref_i:.2f} — roofline position "
+                         f"moved; check flops/bytes deltas"),
+                severity="warn"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# bench cross-check
+# ---------------------------------------------------------------------------
+
+
+def bench_crosscheck(entries: dict[str, dict],
+                     bench_doc: dict | None) -> list[Finding]:
+    """Predicted bytes/query ordering vs measured worker-qps ordering.
+
+    Within one serve_pipeline config family (dense, sharded) the serving
+    path is memory-bound, so the entry the model says moves FEWER bytes
+    per query must be the one the bench measured as FASTER. Disagreement
+    warns: either the model mis-prices something, or (as with the
+    interpreted-CPU int8 dequant overhead) the bench environment is not
+    bandwidth-dominated — either way a human should look.
+
+    ``entries`` should be the CHECKED-IN cost baseline (artifact vs
+    artifact — deterministic regardless of the device count this process
+    happens to see); measured rows work too and have the same shape.
+    """
+    if not bench_doc:
+        return []
+    configs = (bench_doc.get("serve_pipeline") or {}).get("configs") or {}
+
+    def qps(key):
+        row = configs.get(key) or {}
+        return ((row.get("pipelined") or {}).get("worker_qps"))
+
+    by_key = {row["bench_key"]: (label, row)
+              for label, row in entries.items() if row.get("bench_key")}
+    findings: list[Finding] = []
+    fams: dict[str, list[str]] = {}
+    for key, (_label, row) in by_key.items():
+        fams.setdefault(row["family"], []).append(key)
+    for _fam, keys in sorted(fams.items()):
+        keys = sorted(keys)
+        for i, a in enumerate(keys):
+            for b in keys[i + 1:]:
+                qa, qb = qps(a), qps(b)
+                if qa is None or qb is None or qa == qb:
+                    continue
+                la, ra = by_key[a]
+                lb, rb = by_key[b]
+                bytes_a = (ra["hbm_read_bytes_per_query"]
+                           + ra["hbm_write_bytes_per_query"])
+                bytes_b = (rb["hbm_read_bytes_per_query"]
+                           + rb["hbm_write_bytes_per_query"])
+                if bytes_a == bytes_b:
+                    continue
+                model_faster = a if bytes_a < bytes_b else b
+                bench_faster = a if qa > qb else b
+                if model_faster != bench_faster:
+                    findings.append(Finding(
+                        check="cost.bench-mismatch", where=f"{a}-vs-{b}",
+                        message=(f"cost model predicts {model_faster} "
+                                 f"faster ({min(bytes_a, bytes_b):,.0f} vs "
+                                 f"{max(bytes_a, bytes_b):,.0f} bytes/q) "
+                                 f"but BENCH_perf.json measured "
+                                 f"{bench_faster} faster ({qa:.1f} vs "
+                                 f"{qb:.1f} qps) — model or bench "
+                                 f"environment is off the roofline"),
+                        severity="warn"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# CLI entry
+# ---------------------------------------------------------------------------
+
+
+def run(costs_path="analysis_costs.json",
+        bench_path="BENCH_perf.json") -> list[Finding]:
+    measured = measure_all()
+    baseline_doc = None
+    p = pathlib.Path(costs_path)
+    if p.exists():
+        baseline_doc = json.loads(p.read_text())
+    findings = compare_costs(measured, baseline_doc, costs_path=costs_path)
+    bench_doc = None
+    bp = pathlib.Path(bench_path)
+    if bp.exists():
+        bench_doc = json.loads(bp.read_text())
+    findings += bench_crosscheck(
+        baseline_doc["entries"] if baseline_doc else measured, bench_doc)
+    return findings

@@ -3,6 +3,18 @@
 Each module here violates exactly one invariant the analyzers exist to
 catch; ``tests/test_analysis.py`` asserts each produces its expected
 finding (and nothing else). These are NEVER imported by production code.
+
+  * ``bad_jaxpr``      — dispatch-contract violations (shadow upcast,
+    host callback, extra dispatch, recompile churn).
+  * ``bad_locks``      — guarded-field / lock-order / blocking-under-lock
+    violations for the concurrency pass.
+  * ``bad_costs``      — entry points impersonating real serving entries
+    but overspending their ``analysis_costs.json`` budget.
+  * ``bad_invariants`` — rescore pipelines breaking exactly one value
+    contract each (sortedness, dedup tie-break, sentinel mask, segment
+    offsets).
+  * ``bad_handoff``    — a cycle-free producer/consumer handoff deadlock
+    for the lock sanitizer.
 """
 
 #: a topk_score config whose double-buffered f32 strip alone (~64 MiB)

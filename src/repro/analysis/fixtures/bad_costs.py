@@ -1,0 +1,64 @@
+"""Cost-model fixtures: entry points that impersonate a real serving
+entry (same label, same corpus) but spend more than its checked-in
+budget — each must turn the cost gate red against ``analysis_costs.json``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_lints import EntryPoint, _tiny
+
+
+def shadow_copy_entry() -> EntryPoint:
+    """The int8 dense entry with a full-corpus f32 shadow copy inside the
+    dispatch: the quantized index is dequantized wholesale before the
+    matmul instead of strip-by-strip.  Dispatch count is unchanged, but
+    HBM traffic per query balloons — ``cost.regression`` on bytes."""
+    from repro.core import DenseIndex, StaticPruner
+
+    D, Q = _tiny()
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    W, _ = pruner.projection()
+    idx = DenseIndex.build(Dh, quantize_int8=True, backend="jnp")
+    n, m = Dh.shape
+
+    @jax.jit
+    def _bad_search(D8, scale, Wm, q):
+        Df = D8.astype(jnp.float32) * scale[None, :]   # corpus shadow copy
+        s = (q @ Wm) @ Df.T
+        return jax.lax.top_k(s, 10)
+
+    def entry(q):
+        return _bad_search(idx.vectors, idx.scale, W, q)
+
+    return EntryPoint(
+        label="DenseIndex.search_projected[jnp,int8]", fn=entry, args=(Q,),
+        expected_dispatches=1, corpus_shape=(n, m), family="dense",
+        backend="jnp", storage_dtype=str(idx.vectors.dtype), strip_rows=128,
+        batch=int(Q.shape[0]))
+
+
+def extra_dispatch_entry() -> EntryPoint:
+    """The f32 dense entry split into two compiled dispatches (score,
+    then select) instead of one fused computation — ``cost.regression``
+    on the exact-gated dispatch count."""
+    from repro.core import StaticPruner
+
+    D, Q = _tiny()
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    W, _ = pruner.projection()
+    n, m = Dh.shape
+
+    _score = jax.jit(lambda Dm, Wm, q: (q @ Wm) @ Dm.T)
+    _select = jax.jit(lambda s: jax.lax.top_k(s, 10))
+
+    def entry(q):
+        return _select(_score(Dh, W, q))
+
+    return EntryPoint(
+        label="DenseIndex.search_projected[jnp]", fn=entry, args=(Q,),
+        expected_dispatches=1, corpus_shape=(n, m), family="dense",
+        backend="jnp", batch=int(Q.shape[0]))

@@ -27,6 +27,7 @@ invariant, and the resulting jaxpr is walked statically:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Iterable, Sequence
 
 import jax
@@ -232,18 +233,44 @@ def _tiny(n=600, d=32, B=4, seed=0):
     return D, Q
 
 
-def run() -> list[Finding]:
-    """Lint every serving entry point; returns the combined findings."""
-    from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
-    from repro.core.index import (SegmentedIndex, segment_jit_cache_sizes)
-    from repro.core.pca import transform
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One traced serving entry point — the shared registry row consumed by
+    the jaxpr lints, the cost model, and the invariant checker.
 
-    findings: list[Finding] = []
+    ``fn(*args)`` is trace-ready (``jax.make_jaxpr``-safe, tiny corpus, no
+    device traffic implied). ``storage_dtype``/``strip_rows`` are None when
+    the storage-dtype streaming check does not apply (f32 storage, or the
+    deltas' whole-capacity dequant-by-design). ``bench_key`` names the
+    ``BENCH_perf.json`` serve_pipeline config this entry models, when one
+    exists. ``family`` ∈ dense/cascade/sharded/segmented/cascade-seg."""
+
+    label: str
+    fn: Callable
+    args: tuple
+    expected_dispatches: int
+    corpus_shape: tuple[int, int]
+    family: str
+    backend: str
+    storage_dtype: str | None = None
+    strip_rows: int | None = None
+    bench_key: str | None = None
+    batch: int = 4
+
+
+def serving_entry_points() -> tuple[EntryPoint, ...]:
+    """Build every serving entry point on the tiny synthetic corpus."""
+    from repro.core import (CascadeIndex, DenseIndex, ShardedDenseIndex,
+                            StaticPruner)
+    from repro.core.index import SegmentedIndex
+
     D, Q = _tiny()
     pruner = StaticPruner(cutoff=0.5).fit(D)
     Dh = pruner.prune_index(D)
     W, mean = pruner.projection()
     n, m = Dh.shape
+    B = int(Q.shape[0])
+    entries: list[EntryPoint] = []
 
     # -- dense: fused path is ONE dispatch, streams storage dtype ----------
     for quant, backend, block in ((False, "jnp", None), (True, "jnp", 128),
@@ -251,38 +278,37 @@ def run() -> list[Finding]:
         idx = DenseIndex.build(Dh, quantize_int8=quant, backend=backend)
         label = f"DenseIndex.search_projected[{backend}" \
                 f"{',int8' if quant else ''}]"
-        entry = (lambda i: lambda q: i.search_projected(
-            q, W, k=10, mean=mean, block=block))(idx)
-        findings += check_dispatch_count(label, entry, (Q,), expected=1)
-        findings += check_no_callbacks(label, entry, (Q,))
-        if quant:
-            findings += check_storage_dtype_stream(
-                label, entry, (Q,), (n, m), str(idx.vectors.dtype),
-                strip_rows=block)
+        entry = (lambda i, blk: lambda q: i.search_projected(
+            q, W, k=10, mean=mean, block=blk))(idx, block)
+        bench = None
+        if backend == "jnp":          # serve_pipeline rows run jnp backend
+            bench = "dense_int8" if quant else "dense_f32"
+        entries.append(EntryPoint(
+            label=label, fn=entry, args=(Q,), expected_dispatches=1,
+            corpus_shape=(n, m), family="dense", backend=backend,
+            storage_dtype=str(idx.vectors.dtype) if quant else None,
+            strip_rows=block if quant else None, bench_key=bench, batch=B))
 
     # -- cascade (dense x dense): coarse scan + shortlist + gather +
     # exact rescore all trace into the SAME single fused dispatch ----------
-    from repro.core import CascadeIndex
-    B = int(Q.shape[0])
     for quant, backend, block in ((False, "jnp", None), (True, "jnp", 128),
                                   (True, "pallas", 128)):
         cas = CascadeIndex.build(Dh, m_coarse=max(2, m // 2), n_factor=2,
                                  quantize_int8=quant, backend=backend)
         label = f"CascadeIndex.search_projected[{backend}" \
                 f"{',int8' if quant else ''}]"
-        entry = (lambda c: lambda q: c.search_projected(
-            q, W, k=10, mean=mean, block=block))(cas)
-        findings += check_dispatch_count(label, entry, (Q,), expected=1)
-        findings += check_no_callbacks(label, entry, (Q,))
-        if quant:
-            # the (U, m) = (B*nk, m) int8->f32 upcast of the gathered
-            # shortlist IS the rescore stage's dequant unit (one matmul
-            # operand, not a corpus shadow copy) — price the strip as the
-            # larger of the coarse scan strip and the whole shortlist
-            nk = min(cas.n_factor * 10, cas.n)
-            findings += check_storage_dtype_stream(
-                label, entry, (Q,), (n, m), str(cas.full.vectors.dtype),
-                strip_rows=max(block, B * nk))
+        entry = (lambda c, blk: lambda q: c.search_projected(
+            q, W, k=10, mean=mean, block=blk))(cas, block)
+        # the (U, m) = (B*nk, m) int8->f32 upcast of the gathered
+        # shortlist IS the rescore stage's dequant unit (one matmul
+        # operand, not a corpus shadow copy) — price the strip as the
+        # larger of the coarse scan strip and the whole shortlist
+        nk = min(cas.n_factor * 10, cas.n)
+        entries.append(EntryPoint(
+            label=label, fn=entry, args=(Q,), expected_dispatches=1,
+            corpus_shape=(n, m), family="cascade", backend=backend,
+            storage_dtype=(str(cas.full.vectors.dtype) if quant else None),
+            strip_rows=max(block, B * nk) if quant else None, batch=B))
 
     # -- sharded: one dispatch wrapping shard_map + merge ------------------
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
@@ -292,25 +318,27 @@ def run() -> list[Finding]:
                 f"[{'int8' if quant else 'f32'}]"
         entry = (lambda i: lambda q: i.search_projected(
             q, W, k=10, mean=mean, block=128))(sidx)
-        findings += check_dispatch_count(label, entry, (Q,), expected=1)
-        findings += check_no_callbacks(label, entry, (Q,))
-        if quant:
-            findings += check_storage_dtype_stream(
-                label, entry, (Q,), (n, m), str(sidx.vectors.dtype),
-                strip_rows=128)
+        entries.append(EntryPoint(
+            label=label, fn=entry, args=(Q,), expected_dispatches=1,
+            corpus_shape=(n, m), family="sharded", backend="jnp",
+            storage_dtype=str(sidx.vectors.dtype) if quant else None,
+            strip_rows=128 if quant else None,
+            bench_key="sharded_int8" if quant else "sharded_f32", batch=B))
 
     # -- segmented: projection + base + one per delta + merge --------------
+    # (storage-dtype streaming of the base is covered by the dense/sharded
+    # checks above; deltas upcast their whole small capacity by design)
     rng = np.random.default_rng(3)
     seg = SegmentedIndex.from_index(DenseIndex.build(Dh, quantize_int8=True),
                                     delta_capacity=64)
     seg = seg.append(rng.standard_normal((70, m)).astype(np.float32))
     nd = len(seg.deltas)
-    label = f"SegmentedIndex.search_projected[int8,{nd}d]"
-    entry = lambda q: seg.search_projected(q, W, k=10, mean=mean)  # noqa: E731
-    findings += check_dispatch_count(label, entry, (Q,), expected=nd + 3)
-    findings += check_no_callbacks(label, entry, (Q,))
-    # (storage-dtype streaming of the base is covered by the dense/sharded
-    # checks above; deltas upcast their whole small capacity by design)
+    entries.append(EntryPoint(
+        label=f"SegmentedIndex.search_projected[int8,{nd}d]",
+        fn=(lambda s: lambda q: s.search_projected(q, W, k=10,
+                                                   mean=mean))(seg),
+        args=(Q,), expected_dispatches=nd + 3, corpus_shape=(n, m),
+        family="segmented", backend="jnp", batch=B))
 
     # -- segmented cascade: projection + per-segment coarse scans + coarse
     # merge + shortlist + per-segment rescores + select = 2*nd + 6 ---------
@@ -320,13 +348,39 @@ def run() -> list[Finding]:
                               ).segmented(delta_capacity=64)
     cseg = cseg.append(rng_c.standard_normal((70, m)).astype(np.float32))
     cnd = len(cseg.full.deltas)
-    label = f"CascadeIndex.search_projected[seg,int8,{cnd}d]"
-    entry = lambda q: cseg.search_projected(q, W, k=10, mean=mean)  # noqa: E731
-    findings += check_dispatch_count(label, entry, (Q,),
-                                     expected=2 * cnd + 6)
-    findings += check_no_callbacks(label, entry, (Q,))
+    entries.append(EntryPoint(
+        label=f"CascadeIndex.search_projected[seg,int8,{cnd}d]",
+        fn=(lambda c: lambda q: c.search_projected(q, W, k=10,
+                                                   mean=mean))(cseg),
+        args=(Q,), expected_dispatches=2 * cnd + 6, corpus_shape=(n, m),
+        family="cascade-seg", backend="jnp", batch=B))
+    return tuple(entries)
+
+
+def run() -> list[Finding]:
+    """Lint every serving entry point; returns the combined findings."""
+    from repro.core import DenseIndex, StaticPruner
+    from repro.core.index import SegmentedIndex, segment_jit_cache_sizes
+    from repro.core.pca import transform
+
+    findings: list[Finding] = []
+    for ep in serving_entry_points():
+        findings += check_dispatch_count(ep.label, ep.fn, ep.args,
+                                         expected=ep.expected_dispatches)
+        findings += check_no_callbacks(ep.label, ep.fn, ep.args)
+        if ep.storage_dtype is not None:
+            findings += check_storage_dtype_stream(
+                ep.label, ep.fn, ep.args, ep.corpus_shape, ep.storage_dtype,
+                strip_rows=ep.strip_rows)
+
+    D, Q = _tiny()
+    pruner = StaticPruner(cutoff=0.5).fit(D)
+    Dh = pruner.prune_index(D)
+    W, mean = pruner.projection()
+    m = Dh.shape[1]
 
     # -- compaction streaming: the per-block projection is one dispatch ----
+    rng = np.random.default_rng(3)
     label = "pca.transform[compaction-block]"
     block = jnp.asarray(rng.standard_normal((64, D.shape[1]))
                         .astype(np.float32))
@@ -334,6 +388,15 @@ def run() -> list[Finding]:
     findings += check_no_callbacks(label, entry, (block,))
 
     # -- recompile stability across live-counts/offsets --------------------
+    from repro.core import CascadeIndex
+    seg = SegmentedIndex.from_index(DenseIndex.build(Dh, quantize_int8=True),
+                                    delta_capacity=64)
+    seg = seg.append(rng.standard_normal((70, m)).astype(np.float32))
+    rng_c = np.random.default_rng(7)
+    cseg = CascadeIndex.build(Dh, m_coarse=max(2, m // 2), n_factor=2,
+                              quantize_int8=True
+                              ).segmented(delta_capacity=64)
+    cseg = cseg.append(rng_c.standard_normal((70, m)).astype(np.float32))
     state = {"seg": seg}
 
     def dispatch(live_rows: int, _offset: int) -> None:

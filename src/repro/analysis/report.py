@@ -63,8 +63,19 @@ def load_baseline(path: str | Path | None) -> dict[str, str]:
     return out
 
 
+#: finding-key prefix -> analyzer that can produce it, for stale scoping
+PREFIX_ANALYZERS = {"jaxpr.": "jaxpr", "pallas.": "pallas",
+                    "conc.": "conc", "cost.": "cost", "inv.": "inv",
+                    "locks.": "locks"}
+
+
 def apply_baseline(findings: Sequence[Finding],
-                   baseline: dict[str, str]) -> Report:
+                   baseline: dict[str, str],
+                   active_analyzers: Sequence[str] | None = None) -> Report:
+    """``active_analyzers`` scopes staleness: with ``--only conc`` a
+    ``cost.*`` suppression matches nothing *because its analyzer never
+    ran*, which is not evidence of paid-off debt. ``None`` means every
+    analyzer ran. Keys with an unrecognised prefix are always active."""
     kept, suppressed, hit = [], [], set()
     for f in findings:
         if f.key in baseline:
@@ -72,7 +83,15 @@ def apply_baseline(findings: Sequence[Finding],
             hit.add(f.key)
         else:
             kept.append(f)
-    stale = tuple(sorted(set(baseline) - hit))
+
+    def _active(key: str) -> bool:
+        if active_analyzers is None:
+            return True
+        for prefix, analyzer in PREFIX_ANALYZERS.items():
+            if key.startswith(prefix):
+                return analyzer in active_analyzers
+        return True
+    stale = tuple(sorted(k for k in set(baseline) - hit if _active(k)))
     return Report(findings=tuple(kept), suppressed=tuple(suppressed),
                   stale=stale)
 

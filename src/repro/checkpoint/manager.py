@@ -161,7 +161,7 @@ def load_pytree(path: str, target: Any, mesh: Mesh | None = None,
     flat = _flatten_with_paths(target)
     treedef = jax.tree.structure(target)
     leaves = []
-    for name, tgt in flat:
+    for name, _tgt in flat:
         e = by_path[name]
         arr = np.load(os.path.join(path, e["file"]))
         if mesh is not None:

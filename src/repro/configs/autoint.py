@@ -3,7 +3,7 @@
 39 sparse fields (Criteo: 13 bucketised dense + 26 categorical), embed 16,
 3 attention layers, 2 heads, d_attn 32.
 """
-from repro.configs.base import ArchSpec, RECSYS_SHAPES, round_up
+from repro.configs.base import RECSYS_SHAPES, ArchSpec, round_up
 from repro.models.recsys import RecsysConfig
 
 _CRITEO_KAGGLE_CAT = (

@@ -2,8 +2,8 @@
 
 39 sparse fields, embed 10, deep MLP 400-400-400, FM interaction.
 """
-from repro.configs.base import ArchSpec, RECSYS_SHAPES, round_up
-from repro.configs.autoint import _CRITEO_KAGGLE_CAT, _BUCKETISED_DENSE
+from repro.configs.autoint import _BUCKETISED_DENSE, _CRITEO_KAGGLE_CAT
+from repro.configs.base import RECSYS_SHAPES, ArchSpec, round_up
 from repro.models.recsys import RecsysConfig
 
 VOCABS = tuple(round_up(v, 512) for v in _BUCKETISED_DENSE + _CRITEO_KAGGLE_CAT)

@@ -5,7 +5,7 @@ top MLP 1024-1024-512-256-1, dot interaction. Vocab sizes are the Criteo
 Terabyte cardinalities used by the MLPerf reference, rounded up to multiples
 of 512 so table rows shard evenly on both production meshes (256/512 chips).
 """
-from repro.configs.base import ArchSpec, RECSYS_SHAPES, round_up
+from repro.configs.base import RECSYS_SHAPES, ArchSpec, round_up
 from repro.models.recsys import RecsysConfig
 
 _CRITEO_TB_VOCABS = (

@@ -7,7 +7,7 @@ small, sampled minibatch, full-batch 2.4M-node, batched molecules). Input
 feature width comes from each shape; output stays n_vars=227 (regression),
 matching the arch definition — see DESIGN.md §5.
 """
-from repro.configs.base import ArchSpec, GNN_SHAPES
+from repro.configs.base import GNN_SHAPES, ArchSpec
 from repro.models.gnn import GNNConfig
 
 N_VARS = 227

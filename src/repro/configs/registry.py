@@ -5,10 +5,19 @@ from typing import Iterator
 
 from jax.sharding import Mesh
 
-from repro.configs import (arctic_480b, autoint, biencoder_msmarco, deepfm,
-                           dlrm_mlperf, graphcast, mixtral_8x7b,
-                           phi3_medium_14b, qwen2_1_5b, smollm_135m,
-                           two_tower_retrieval)
+from repro.configs import (
+    arctic_480b,
+    autoint,
+    biencoder_msmarco,
+    deepfm,
+    dlrm_mlperf,
+    graphcast,
+    mixtral_8x7b,
+    phi3_medium_14b,
+    qwen2_1_5b,
+    smollm_135m,
+    two_tower_retrieval,
+)
 from repro.configs.base import ArchSpec, ShapeCell
 from repro.configs.steps import BUNDLE_BUILDERS, StepBundle
 
@@ -38,7 +47,8 @@ def get_arch(arch_id: str) -> ArchSpec:
     try:
         return _MODULES[arch_id].spec()
     except KeyError:
-        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+        raise KeyError(f"unknown arch {arch_id!r}; "
+                       f"known: {sorted(_MODULES)}") from None
 
 
 def get_smoke_cfg(arch_id: str):

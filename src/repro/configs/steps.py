@@ -18,13 +18,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, ShapeCell, round_up
-from repro.models import biencoder as BE
-from repro.models import gnn as G
-from repro.models import recsys as R
-from repro.models import transformer as T
-from repro.optim import adamw, adafactor
-from repro.par import compat
-from repro.par import sharding as SH
+from repro.models import biencoder as BE, gnn as G, recsys as R, transformer as T
+from repro.optim import adafactor, adamw
+from repro.par import compat, sharding as SH
 
 TOPK_SERVE = 100  # retrieval top-k
 

@@ -5,7 +5,7 @@ shape (1 query vs 10^6 candidates) is the paper's exact dense-retrieval
 setting: the candidate index is built offline from the item tower and is
 PCA-prunable via ``repro.core.StaticPruner`` (256 → m dims).
 """
-from repro.configs.base import ArchSpec, RECSYS_SHAPES
+from repro.configs.base import RECSYS_SHAPES, ArchSpec
 from repro.models.recsys import RecsysConfig
 
 CFG = RecsysConfig(

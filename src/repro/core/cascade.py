@@ -45,9 +45,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import (Backend, DenseIndex, SegmentedIndex,
-                              _project_nofold, _scan_topk, _topk_merge,
-                              project_queries)
+from repro.core.index import (
+    Backend,
+    DenseIndex,
+    SegmentedIndex,
+    _project_nofold,
+    _scan_topk,
+    _topk_merge,
+    project_queries,
+)
 
 
 def _shortlist(cids: jax.Array) -> jax.Array:

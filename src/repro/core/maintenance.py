@@ -44,6 +44,18 @@ from repro.core.index import DenseIndex, SegmentedIndex, ShardedDenseIndex
 from repro.core.pruning import StaticPruner
 
 
+def _new_rlock():
+    """Call-time ``threading.RLock`` lookup for the dataclass default.
+
+    ``default_factory=threading.RLock`` freezes the lock class at module
+    import; an instrumented ``threading.RLock`` (see
+    ``repro.analysis.lock_sanitizer``) installed later would be ignored
+    for every new updater. Resolving at call time keeps construction
+    late-bound.
+    """
+    return threading.RLock()
+
+
 def _eigval_energy(pruner: StaticPruner) -> float:
     """Reference captured energy from the fitted state alone.
 
@@ -102,7 +114,7 @@ class IndexUpdater:
     # telemetry
     appended_rows: int = 0
     compactions: int = 0
-    _lock: threading.RLock = dataclasses.field(default_factory=threading.RLock,
+    _lock: threading.RLock = dataclasses.field(default_factory=_new_rlock,
                                                repr=False, compare=False)
 
     def __post_init__(self):

@@ -73,8 +73,7 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.checkpoint.manager import (commit_dir, fsync_dir, fsync_file,
-                                      write_json_fsync)
+from repro.checkpoint.manager import commit_dir, fsync_dir, fsync_file, write_json_fsync
 
 FORMAT_VERSION = 1
 MANIFEST = "manifest.json"

@@ -36,7 +36,7 @@ def topk_score(D: jax.Array, Q: jax.Array, *, k: int, block_n: int = 1024,
     scale must be folded into ``Q``); ``block_b`` tiles the query batch;
     ``n_valid`` masks trailing padding rows out of the results.
     ``row_ids`` switches to shortlist-rescore mode: each row reports its
-    gathered true doc id (ascending, negative sentinels masked out).
+    gathered true doc id (any order; negative sentinels masked out).
     """
     if interpret is None:
         interpret = _interpret_default()

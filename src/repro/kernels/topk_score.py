@@ -28,9 +28,10 @@ adaptation:
   * a **block-skip guard** (FAISS's "thermometer" trick, TPU-flavoured):
     if a strip's max score does not beat the current k-th best, the merge
     is skipped entirely under ``pl.when`` — for well-shuffled indexes the
-    merge runs O(few) times instead of O(n/block_n). Skipping on equality
-    is exact: strips are visited in ascending id order, so a later tied
-    score loses the min-id tie-break anyway.
+    merge runs O(few) times instead of O(n/block_n). In plain mode the
+    skip fires on equality too, which is exact because strips are visited
+    in ascending id order (a later tied score loses the min-id tie-break
+    anyway); rescore mode merges on equality — see below.
 
 HBM traffic ≈ bytes(D̂) streamed exactly once per batch tile ⇒ the kernel
 is memory-bound at the index-read roofline, which is the paper's O(mn)
@@ -45,9 +46,13 @@ row position no longer equals doc id. ``row_ids`` streams a (1, U) int32
 id row alongside the strips: the kernel scores position ``j`` but reports
 ``row_ids[j]``, and masks ``row_ids[j] < 0`` (dedup/pad sentinels) to
 -inf instead of the ``n_valid`` iota mask. The min-id-among-ties extract
-makes the result independent of gather order, but the block-skip guard's
-skip-on-equality is only exact when ``row_ids`` is ascending (sentinels
-first) — which the cascade's sorted shortlist guarantees.
+makes the result independent of gather order, and the block-skip guard
+merges (rather than skips) on score equality in this mode, so exactness
+holds for *arbitrary* ``row_ids`` order: a tied candidate in a later
+strip may carry a smaller id and must get its shot at the tie-break.
+(The cascade's ``_shortlist`` still emits ascending ids, which maximises
+how often the strict-improvement skip fires; correctness no longer
+depends on it.)
 """
 from __future__ import annotations
 
@@ -150,10 +155,16 @@ def _make_kernel(k: int, n_valid: int, block_n: int, nblocks: int,
             s = jnp.where(gids < n_valid, s, _NEG)
 
         # Block-skip guard: merge only if this strip can improve the top-k.
+        # Plain mode skips on equality: strips are visited in ascending id
+        # order (iota ids), so a later tied score loses the min-id tie-break
+        # anyway. Rescore mode must MERGE on equality: row_ids carry
+        # arbitrary gathered order, so a tied candidate in a later strip may
+        # hold a smaller id and win the tie-break.
         blk_max = jnp.max(s)
         kth_best = jnp.min(run_s_ref[...])
+        can_improve = blk_max >= kth_best if with_ids else blk_max > kth_best
 
-        @pl.when(blk_max > kth_best)
+        @pl.when(can_improve)
         def _merge():
             bb = s.shape[0]
             if pad_w:
@@ -216,9 +227,8 @@ def topk_score_pallas(D: jax.Array, Q: jax.Array, *, k: int,
     ``n_valid``: logical row count; rows with id >= n_valid (e.g. device
        padding in a sharded index) never surface in results.
     ``row_ids``: optional (n,) int32 true doc id per row — rescore mode for
-       a gathered shortlist. Ids must be ascending (negative dedup/pad
-       sentinels first); rows with a negative id are masked out and
-       ``n_valid`` is ignored.
+       a gathered shortlist, in any order. Rows with a negative id
+       (dedup/pad sentinels) are masked out and ``n_valid`` is ignored.
     Returns (scores (B, k) f32 sorted desc, ids (B, k) int32; -1 pads).
     """
     n, m = D.shape

@@ -28,9 +28,9 @@ from collections import defaultdict
 
 import jax
 import numpy as np
+from jax import core as jcore
 
 from repro.par import compat
-from jax import core as jcore
 
 
 def _aval_bytes(aval) -> int:

@@ -90,8 +90,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CascadeIndex, DenseIndex, IndexStore,
-                        ShardedDenseIndex, StaticPruner)
+from repro.core import CascadeIndex, DenseIndex, IndexStore, ShardedDenseIndex, StaticPruner
 from repro.core.store import save_index
 from repro.data.synthetic import make_dataset
 from repro.util import force_host_device_count

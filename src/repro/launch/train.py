@@ -31,8 +31,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import registry
 from repro.configs.base import ArchSpec, ShapeCell
 from repro.configs.steps import BUNDLE_BUILDERS
-from repro.data import recsys as rdata
-from repro.data import tokens as tdata
+from repro.data import recsys as rdata, tokens as tdata
 from repro.data.graph import batched_molecules
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 

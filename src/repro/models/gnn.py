@@ -21,7 +21,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import init_mlp_stack, apply_mlp_stack, init_layernorm, apply_layernorm
+from repro.models.layers import apply_layernorm, apply_mlp_stack, init_layernorm, init_mlp_stack
 
 
 @dataclasses.dataclass(frozen=True)

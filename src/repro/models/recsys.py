@@ -28,8 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import (apply_dense, init_dense, init_mlp_stack,
-                                 apply_mlp_stack)
+from repro.models.layers import apply_dense, apply_mlp_stack, init_dense, init_mlp_stack
 from repro.par import compat
 
 

@@ -18,8 +18,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
-from repro.models import moe as M
+from repro.models import layers as L, moe as M
 
 
 @dataclasses.dataclass(frozen=True)

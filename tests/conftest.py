@@ -15,3 +15,26 @@ _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
         f"{_flags} --xla_force_host_platform_device_count=4".strip())
+
+import pytest  # noqa: E402  (must come after the XLA_FLAGS block)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_monitor():
+    """Record every lock acquisition order the serving tests exercise.
+
+    ``threading.Lock/RLock/Condition`` are wrapped for the whole session
+    (scoped to locks created by ``repro`` code), and the observed
+    held->acquired graph lands in ``LOCK_graph.json`` at session end. CI
+    feeds it back through ``python -m repro.analysis --lock-graph`` so a
+    runtime order the static deadlock lint cannot see fails the gate.
+    """
+    from repro.analysis import lock_sanitizer
+    mon = lock_sanitizer.LockMonitor()
+    originals = lock_sanitizer.instrument(mon)
+    try:
+        yield mon
+    finally:
+        lock_sanitizer.uninstrument(originals)
+        mon.write(os.path.join(os.path.dirname(__file__), os.pardir,
+                               "LOCK_graph.json"))

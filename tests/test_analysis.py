@@ -8,16 +8,14 @@ future red is a real regression).
 import json
 from pathlib import Path
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
-
 from repro.analysis import Finding, concurrency, jaxpr_lints, pallas_budget
 from repro.analysis.fixtures import BAD_TOPK_CONFIG, bad_jaxpr
-from repro.analysis.report import (apply_baseline, format_text,
-                                   load_baseline, write_report)
+from repro.analysis.report import apply_baseline, format_text, load_baseline, write_report
 
 REPO = Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "src" / "repro" / "analysis" / "fixtures"
@@ -213,7 +211,8 @@ class C:
 def test_real_serving_code_clean_modulo_baseline():
     fs = concurrency.run()
     report = apply_baseline(fs, load_baseline(REPO
-                                              / "analysis_baseline.json"))
+                                              / "analysis_baseline.json"),
+                            active_analyzers=["conc"])
     assert report.gating == ()
     assert report.stale == ()
 
@@ -275,3 +274,270 @@ def test_cli_conc_gate_green_and_red(tmp_path):
                "--baseline", str(tmp_path / "missing.json"),
                "--fail-on-findings"])
     assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def _costs_doc():
+    return json.loads((REPO / "analysis_costs.json").read_text())
+
+
+def test_cost_baseline_schema_valid():
+    from repro.analysis import cost_model
+    cost_model.check_costs_schema(_costs_doc())     # must not raise
+
+
+def test_cost_schema_rejects_missing_metric():
+    from repro.analysis import cost_model
+    doc = _costs_doc()
+    label = next(iter(doc["entries"]))
+    del doc["entries"][label]["flops_per_query"]
+    with pytest.raises(SystemExit, match="flops_per_query"):
+        cost_model.check_costs_schema(doc)
+
+
+def test_cost_shadow_copy_fixture_fails_gate():
+    """An f32 shadow copy of the int8 index must blow the per-query HBM
+    byte budget of the entry it impersonates."""
+    from repro.analysis import cost_model
+    from repro.analysis.fixtures import bad_costs
+    ep = bad_costs.shadow_copy_entry()
+    doc = _costs_doc()
+    sub = {"schema": doc["schema"],
+           "entries": {ep.label: doc["entries"][ep.label]}}
+    fs = cost_model.compare_costs({ep.label: cost_model.measure_entry(ep)},
+                                  sub)
+    regressed = {f.where.rsplit(":", 1)[-1] for f in fs
+                 if f.check == "cost.regression"}
+    assert "hbm_read_bytes_per_query" in regressed
+    assert "dispatches" not in regressed         # same dispatch count
+
+
+def test_cost_extra_dispatch_fixture_fails_gate():
+    from repro.analysis import cost_model
+    from repro.analysis.fixtures import bad_costs
+    ep = bad_costs.extra_dispatch_entry()
+    doc = _costs_doc()
+    sub = {"schema": doc["schema"],
+           "entries": {ep.label: doc["entries"][ep.label]}}
+    fs = cost_model.compare_costs({ep.label: cost_model.measure_entry(ep)},
+                                  sub)
+    assert any(f.check == "cost.regression"
+               and f.where.endswith(":dispatches") for f in fs)
+
+
+def test_cost_bench_crosscheck_flags_inverted_ordering():
+    from repro.analysis import cost_model
+    entries = {
+        "A": {"family": "dense", "bench_key": "ka",
+              "hbm_read_bytes_per_query": 100.0,
+              "hbm_write_bytes_per_query": 0.0},
+        "B": {"family": "dense", "bench_key": "kb",
+              "hbm_read_bytes_per_query": 900.0,
+              "hbm_write_bytes_per_query": 0.0},
+    }
+    bench = {"serve_pipeline": {"configs": {
+        "ka": {"pipelined": {"worker_qps": 10.0}},
+        "kb": {"pipelined": {"worker_qps": 50.0}},
+    }}}
+    fs = cost_model.bench_crosscheck(entries, bench)
+    assert [f.check for f in fs] == ["cost.bench-mismatch"]
+    assert fs[0].severity == "warn"
+    bench["serve_pipeline"]["configs"]["kb"]["pipelined"]["worker_qps"] = 5.0
+    assert cost_model.bench_crosscheck(entries, bench) == []
+
+
+def test_cli_cost_gate_green_and_red(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "rep.json"
+    rc = main(["--only", "cost", "--json", str(out),
+               "--baseline", str(REPO / "analysis_baseline.json"),
+               "--costs", str(REPO / "analysis_costs.json"),
+               "--bench", str(REPO / "BENCH_perf.json"),
+               "--fail-on-findings"])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["counts"]["gating"] == 0
+    # doctor one entry's byte budget far below what the code spends: the
+    # same gate must go red
+    costs = _costs_doc()
+    label = "DenseIndex.search_projected[jnp]"
+    costs["entries"][label]["hbm_read_bytes_per_query"] /= 4.0
+    doctored = tmp_path / "costs.json"
+    doctored.write_text(json.dumps(costs))
+    rc = main(["--only", "cost", "--json", "",
+               "--baseline", str(REPO / "analysis_baseline.json"),
+               "--costs", str(doctored),
+               "--bench", str(REPO / "BENCH_perf.json"),
+               "--fail-on-findings"])
+    assert rc == 1
+
+
+def test_cost_write_baseline_roundtrips(tmp_path):
+    from repro.analysis import cost_model
+    from repro.analysis.jaxpr_lints import serving_entry_points
+    eps = [ep for ep in serving_entry_points() if ep.family == "dense"]
+    measured = cost_model.measure_all(eps)
+    path = tmp_path / "costs.json"
+    cost_model.write_baseline(path, measured)
+    doc = json.loads(path.read_text())
+    assert cost_model.compare_costs(measured, doc) == []
+
+
+# ---------------------------------------------------------------------------
+# dataflow invariants
+# ---------------------------------------------------------------------------
+
+
+def test_invariants_clean_on_live_entry_points():
+    from repro.analysis import invariants
+    assert invariants.run() == []
+
+
+def _inv_fixture_args():
+    D = jnp.asarray(RNG.standard_normal((64, 16)).astype(np.float32))
+    q = jnp.asarray(RNG.standard_normal((2, 16)).astype(np.float32))
+    cids = jnp.asarray(RNG.integers(0, 64, size=(2, 12)).astype(np.int32))
+    return D, q, cids
+
+
+@pytest.mark.parametrize("fn_name,expect", [
+    ("unsorted_rescore", "inv.rowids-order"),
+    ("swapped_dedup_rescore", "inv.dedup-tiebreak"),
+    ("unmasked_rescore_jnp", "inv.sentinel-mask"),
+])
+def test_invariant_fixtures_trip_exactly_their_finding(fn_name, expect):
+    from repro.analysis import invariants
+    from repro.analysis.fixtures import bad_invariants
+    fs = invariants.check_entry(f"fixture.{fn_name}",
+                                getattr(bad_invariants, fn_name),
+                                _inv_fixture_args())
+    assert [f.check for f in fs] == [expect]
+    assert all(f.severity == "error" for f in fs)
+
+
+def test_segment_offset_fixture_flagged():
+    from repro.analysis import invariants
+    from repro.analysis.fixtures import bad_invariants
+    D8a = jnp.asarray(RNG.integers(-127, 127, (64, 16)).astype(np.int8))
+    D8b = jnp.asarray(RNG.integers(-127, 127, (64, 16)).astype(np.int8))
+    sc = jnp.full((16,), 0.05, jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((2, 16)).astype(np.float32))
+    fs = invariants.check_entry("fixture.overlap",
+                                bad_invariants.overlapping_segments,
+                                (D8a, D8b, sc, q))
+    assert [f.check for f in fs] == ["inv.segment-offsets"]
+    assert "100" in fs[0].message and "132" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# lock sanitizer
+# ---------------------------------------------------------------------------
+
+
+def test_handoff_fixture_flagged_exactly():
+    from repro.analysis import lock_sanitizer
+    infos = concurrency.analyze_classes(
+        (FIXTURES / "bad_handoff.py").read_text(), "fx")
+    fs = lock_sanitizer.handoff_findings(infos)
+    assert [f.key for f in fs] == \
+        ["locks.handoff-deadlock:fx:StalledPipeline.consume:_q"]
+    # and the lock-order pass sees nothing: no cycle exists
+    assert concurrency.lock_order_findings(infos) == []
+
+
+def test_handoff_clean_on_live_tree():
+    from repro.analysis import lock_sanitizer
+    assert lock_sanitizer.run() == []
+
+
+def test_static_lock_graph_contents():
+    from repro.analysis import lock_sanitizer
+    g = lock_sanitizer.static_lock_graph()
+    assert g["schema"] == lock_sanitizer.LOCKGRAPH_SCHEMA
+    assert {"BatchingQueue._cv", "IndexUpdater._lock",
+            "RetrievalServer._index_lock",
+            "RetrievalServer._inflight_lock",
+            "RetrievalServer._log_lock"} <= set(g["nodes"])
+    assert ["IndexUpdater._lock", "RetrievalServer._index_lock"] \
+        in g["edges"]
+    assert g["handoffs"] == []
+
+
+def test_crosscheck_divergence_and_unknown_lock():
+    from repro.analysis import lock_sanitizer
+    static = {"schema": lock_sanitizer.LOCKGRAPH_SCHEMA,
+              "nodes": ["A.x", "B.y", "C.z"],
+              "edges": [["A.x", "B.y"], ["B.y", "C.z"]]}
+    ok = {"schema": lock_sanitizer.LOCKGRAPH_SCHEMA,
+          "nodes": ["A.x", "C.z"],
+          "edges": [["A.x", "C.z"]]}       # in the transitive closure
+    assert lock_sanitizer.crosscheck(ok, static) == []
+    bad = {"schema": lock_sanitizer.LOCKGRAPH_SCHEMA,
+           "nodes": ["A.x", "B.y", "D.w"],
+           "edges": [["B.y", "A.x"]]}      # reversed + unknown node
+    fs = lock_sanitizer.crosscheck(bad, static)
+    keys = sorted(f.key for f in fs)
+    assert keys == ["locks.graph-divergence:B.y->A.x",
+                    "locks.unknown-lock:D.w"]
+    sev = {f.key: f.severity for f in fs}
+    assert sev["locks.unknown-lock:D.w"] == "warn"
+    assert sev["locks.graph-divergence:B.y->A.x"] == "error"
+
+
+def test_lock_graph_schema_rejected(tmp_path):
+    from repro.analysis import lock_sanitizer
+    p = tmp_path / "g.json"
+    p.write_text(json.dumps({"schema": "nope", "nodes": [], "edges": []}))
+    with pytest.raises(SystemExit, match="lockgraph"):
+        lock_sanitizer.run(lock_graph_path=str(p))
+
+
+def test_runtime_lock_graph_embeds_in_static():
+    """Drive a real updater+server through query/append/swap under a
+    fresh monitor: every runtime acquisition order must embed in the
+    static graph (the CI cross-check, in miniature)."""
+    from repro.analysis import lock_sanitizer
+    mon = lock_sanitizer.LockMonitor()
+    originals = lock_sanitizer.instrument(mon)
+    try:
+        from repro.core.maintenance import IndexUpdater
+        from repro.launch.serve import RetrievalServer
+        corpus = jnp.asarray(RNG.standard_normal((96, 32))
+                             .astype(np.float32))
+        upd = IndexUpdater.build(corpus, cutoff=0.5, quantize_int8=True,
+                                 delta_capacity=16)
+        assert type(upd._lock).__name__ == "_TrackedLock"  # late-bound
+        srv = RetrievalServer(upd.index, upd.pruner, max_batch=4)
+        upd.server = srv
+        try:
+            srv.query(np.asarray(corpus[0]))
+            upd.add_documents(jnp.asarray(
+                RNG.standard_normal((8, 32)).astype(np.float32)))
+            srv.query(np.asarray(corpus[0]))
+        finally:
+            srv.close()
+    finally:
+        lock_sanitizer.uninstrument(originals)
+    observed = mon.to_doc()
+    # the append path's cross-class order was actually exercised
+    assert ["IndexUpdater._lock", "RetrievalServer._index_lock"] \
+        in observed["edges"]
+    assert lock_sanitizer.crosscheck(
+        observed, lock_sanitizer.static_lock_graph()) == []
+
+
+def test_stale_suppressions_scoped_to_ran_analyzers():
+    findings = [_f(check="conc.x", where="a")]
+    baseline = {"conc.x:a": "reviewed", "cost.regression:gone": "reviewed",
+                "mystery.key:z": "reviewed"}
+    # cost analyzer did not run: its unmatched key is NOT stale; an
+    # unrecognised prefix always is
+    rep = apply_baseline(findings, baseline, active_analyzers=["conc"])
+    assert rep.stale == ("mystery.key:z",)
+    # with every analyzer active (None) the cost key is genuinely stale
+    rep = apply_baseline(findings, baseline, active_analyzers=None)
+    assert sorted(rep.stale) == ["cost.regression:gone", "mystery.key:z"]

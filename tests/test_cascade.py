@@ -17,12 +17,18 @@ Covers the acceptance surface of the two-stage cascade:
 import json
 import os
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
-from repro.core import (CascadeIndex, DenseIndex, IndexStore,
-                        IndexStoreError, StaticPruner, save_index)
+from repro.core import (
+    CascadeIndex,
+    DenseIndex,
+    IndexStore,
+    IndexStoreError,
+    StaticPruner,
+    save_index,
+)
 
 RNG = np.random.default_rng(17)
 

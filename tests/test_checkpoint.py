@@ -1,10 +1,10 @@
 """Checkpoint manager: atomic commit, async, retention, elastic restore."""
 import os
 
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree

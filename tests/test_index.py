@@ -1,11 +1,10 @@
 """DenseIndex / ShardedDenseIndex / int8 quantisation."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import DenseIndex, ShardedDenseIndex
-from repro.core.quantization import (dequantize_int8, quantization_error,
-                                     quantize_int8_per_dim)
+from repro.core.quantization import dequantize_int8, quantization_error, quantize_int8_per_dim
 
 RNG = np.random.default_rng(7)
 

@@ -1,8 +1,8 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.kernels import ops, ref
 
@@ -226,6 +226,41 @@ def test_topk_block_skip_guard_parity():
     s1, i1 = ops.topk_score(D, Q, k=8, block_n=64, interpret=True)
     s2, i2 = ref.topk_score_ref(D, Q, k=8)
     assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_topk_rescore_nonascending_ids_tiebreak():
+    """Regression (ROADMAP follow-up (a)): rescore mode with a deliberately
+    NON-ascending shortlist. A tied score in a later strip carries a
+    SMALLER doc id; the old skip-on-equality guard never merged that strip,
+    surfacing the larger id and breaking the min-id tie-break. The guard
+    now merges on equality whenever row_ids is present."""
+    m = 16
+    D = np.zeros((16, m), np.float32)
+    D[:, 0] = np.linspace(0.5, 2.0, 16)   # background, all < 5
+    D[3, 0] = 5.0     # strip 1 (rows 0-7): tied max, LARGER id
+    D[11, 0] = 5.0    # strip 2 (rows 8-15): tied max, SMALLER id
+    row_ids = np.asarray([20, 21, 22, 10, 24, 25, 26, 27,
+                          28, 29, 30, 7, 32, 33, 34, 35], np.int32)
+    Q = np.zeros((1, m), np.float32)
+    Q[0, 0] = 1.0
+    s, ids = ops.topk_score(jnp.asarray(D), jnp.asarray(Q), k=1, block_n=8,
+                            interpret=True, row_ids=jnp.asarray(row_ids))
+    assert float(np.asarray(s)[0, 0]) == 5.0
+    assert int(np.asarray(ids)[0, 0]) == 7    # min id among the tied max
+
+
+def test_topk_rescore_ascending_ids_unchanged():
+    """The guard change must be invisible for the ascending shortlists the
+    cascade actually emits: rescore-mode results still match the oracle."""
+    D = _rand((200, 32), jnp.float32)
+    Q = _rand((3, 32), jnp.float32)
+    ids = jnp.arange(200, dtype=jnp.int32) + 1000       # ascending, offset
+    s1, i1 = ops.topk_score(D, Q, k=7, block_n=64, interpret=True,
+                            row_ids=ids)
+    s2, i2 = ref.topk_score_ref(D, Q, k=7)
+    assert (np.asarray(i1) == np.asarray(i2) + 1000).all()
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                rtol=1e-4, atol=1e-4)
 

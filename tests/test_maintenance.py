@@ -1,6 +1,6 @@
 """Index maintenance: incremental adds + drift-triggered refit policy."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.maintenance import IndexUpdater, captured_energy
 from repro.core.pruning import StaticPruner

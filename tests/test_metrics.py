@@ -2,9 +2,16 @@
 import numpy as np
 import pytest
 
-from repro.core.metrics import (average_precision, dcg, evaluate_run,
-                                mean_metrics, mrr_at_k, ndcg_at_k,
-                                recall_at_k, wilcoxon_significant)
+from repro.core.metrics import (
+    average_precision,
+    dcg,
+    evaluate_run,
+    mean_metrics,
+    mrr_at_k,
+    ndcg_at_k,
+    recall_at_k,
+    wilcoxon_significant,
+)
 
 
 def test_dcg_hand_computed():

@@ -1,15 +1,21 @@
 """LM transformer: attention modes, MoE routing, decode consistency."""
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.models import moe as M
 from repro.models.layers import blocked_attention, dense_attention
-from repro.models.transformer import (TransformerConfig, decode_step,
-                                      decode_step_sliding, forward_hidden,
-                                      forward_train, init_lm, prefill,
-                                      _unembed)
+from repro.models.transformer import (
+    TransformerConfig,
+    _unembed,
+    decode_step,
+    decode_step_sliding,
+    forward_hidden,
+    forward_train,
+    init_lm,
+    prefill,
+)
 
 CFG = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                         d_ff=128, vocab=256, compute_dtype="float32",

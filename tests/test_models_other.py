@@ -1,12 +1,17 @@
 """GNN, recsys, bi-encoder model behaviour."""
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.models import recsys as R
-from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
-                                    init_biencoder, shard_contrastive_loss)
+from repro.models.biencoder import (
+    BiEncoderConfig,
+    contrastive_loss,
+    encode,
+    init_biencoder,
+    shard_contrastive_loss,
+)
 from repro.models.gnn import GNNConfig, forward as gnn_fwd, init_gnn, mse_loss
 from repro.par import compat
 

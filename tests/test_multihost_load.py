@@ -8,11 +8,10 @@ windows partition the padded row space, and a sharding that claims only a
 SUBSET of devices (what one process of a multi-host job sees) yields read
 ranges confined to that subset's rows.
 """
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner
 from repro.core.index import _addressable_shard_ranges

@@ -1,13 +1,21 @@
 """Optimizers, schedules, gradient compression."""
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.optim import (AdamWConfig, adafactor_init, adafactor_update,
-                         adamw_init, adamw_update, compressed_psum,
-                         constant_lr, error_feedback_step, warmup_cosine)
+from repro.optim import (
+    AdamWConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    compressed_psum,
+    constant_lr,
+    error_feedback_step,
+    warmup_cosine,
+)
 from repro.optim.adamw import opt_state_specs, zero1_specs
 from repro.optim.grad_compress import init_residual
 from repro.par import compat

@@ -1,13 +1,21 @@
 """PCA core unit tests. Hypothesis property tests live in
 test_pca_properties.py behind ``pytest.importorskip`` — a missing optional
 package must never kill tier-1 collection."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
-from repro.core import (fit_pca, fit_pca_streaming, gram, transform,
-                        m_from_cutoff, cutoff_from_m, m_for_variance,
-                        save_pca, load_pca)
+from repro.core import (
+    cutoff_from_m,
+    fit_pca,
+    fit_pca_streaming,
+    gram,
+    load_pca,
+    m_for_variance,
+    m_from_cutoff,
+    save_pca,
+    transform,
+)
 
 RNG = np.random.default_rng(0)
 

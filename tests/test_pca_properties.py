@@ -4,15 +4,14 @@ Separated from test_pca.py so the optional ``hypothesis`` dependency can
 never break tier-1 collection: importorskip skips this module cleanly when
 the package is absent (it ships in the ``dev`` extra).
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (fit_pca, transform, transform_query,
-                        inverse_transform)
+from repro.core import fit_pca, inverse_transform, transform, transform_query
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,7 +1,7 @@
 """StaticPruner end-to-end behaviour incl. the paper's RQ claims in miniature."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 from repro.core import DenseIndex, StaticPruner
 from repro.core.metrics import evaluate_run, mean_metrics

@@ -1,10 +1,9 @@
 """Rowwise-AdaGrad embedding optimizer (repro.optim.rowwise)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.optim.rowwise import (combine_duplicate_rows,
-                                 rowwise_adagrad_update)
+from repro.optim.rowwise import combine_duplicate_rows, rowwise_adagrad_update
 
 
 def test_combine_duplicate_rows_exact():
@@ -44,7 +43,7 @@ def test_rowwise_descends_on_embedding_regression():
         return jnp.mean((rows - tgt_rows) ** 2)
 
     losses = []
-    for step in range(60):
+    for _step in range(60):
         idx = jnp.asarray(rng.integers(0, V, B), jnp.int32)
         rows = table[idx]
         l, g = jax.value_and_grad(loss)(rows, target[idx])

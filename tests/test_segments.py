@@ -16,14 +16,21 @@ The acceptance surface of the segment architecture:
 import os
 import threading
 
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
-from repro.core import (DeltaSegment, DenseIndex, IndexStore, IndexStoreError,
-                        SegmentedIndex, ShardedDenseIndex, StaticPruner,
-                        save_index)
+from repro.core import (
+    DeltaSegment,
+    DenseIndex,
+    IndexStore,
+    IndexStoreError,
+    SegmentedIndex,
+    ShardedDenseIndex,
+    StaticPruner,
+    save_index,
+)
 from repro.core.index import segment_jit_cache_sizes
 from repro.core.maintenance import IndexUpdater
 from repro.core.quantization import quantize_int8_per_dim

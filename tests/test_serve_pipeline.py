@@ -9,9 +9,9 @@ must flush — never drop — accepted work.
 import threading
 import time
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 from repro.core import DenseIndex, StaticPruner
 from repro.launch.serve import BatchingQueue, RetrievalServer, _drive_open

@@ -6,13 +6,12 @@ Oracles: ``_scan_topk`` / ``DenseIndex.search`` for ``ShardedDenseIndex``,
 Covers int8 quantisation and row counts not divisible by the device count
 (device-padding rows must never surface in results).
 """
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
-from repro.core import (DenseIndex, ShardedDenseIndex, StaticPruner,
-                        fit_pca, fit_pca_distributed)
+from repro.core import DenseIndex, ShardedDenseIndex, StaticPruner, fit_pca, fit_pca_distributed
 from repro.par import compat
 
 RNG = np.random.default_rng(42)

@@ -3,8 +3,14 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.par.compat import abstract_mesh
-from repro.par.sharding import (ShardingRules, gnn_rules, lm_rules,
-                                logical_to_physical, recsys_rules, spec_for)
+from repro.par.sharding import (
+    ShardingRules,
+    gnn_rules,
+    lm_rules,
+    logical_to_physical,
+    recsys_rules,
+    spec_for,
+)
 
 # rules resolve against mesh *shape* only — an abstract mesh needs no
 # devices; compat.abstract_mesh handles both AbstractMesh signatures

@@ -1,10 +1,10 @@
 """Per-architecture smoke tests: reduced config, one forward/train step on
 CPU, asserting output shapes + no NaNs. The FULL configs are exercised only
 via the AOT dry-run (ShapeDtypeStruct, no allocation)."""
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs import registry
 from repro.configs.registry import get_smoke_cfg

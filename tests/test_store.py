@@ -14,13 +14,19 @@ import json
 import os
 import tracemalloc
 
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
-from repro.core import (DenseIndex, IndexStore, IndexStoreError,
-                        ShardedDenseIndex, StaticPruner, save_index)
+from repro.core import (
+    DenseIndex,
+    IndexStore,
+    IndexStoreError,
+    ShardedDenseIndex,
+    StaticPruner,
+    save_index,
+)
 from repro.core.maintenance import IndexUpdater
 from repro.core.store import IndexStoreWriter
 

@@ -5,16 +5,15 @@ encode a synthetic corpus -> fit PCA offline -> prune index + queries ->
 serve top-k -> score with IR metrics -> verify the paper's qualitative
 claims hold on the *learned* (not just synthetic-gaussian) embeddings.
 """
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import DenseIndex, StaticPruner
 from repro.core.metrics import evaluate_run, mean_metrics
 from repro.data.tokens import pair_batch
-from repro.models.biencoder import (BiEncoderConfig, contrastive_loss, encode,
-                                    init_biencoder)
+from repro.models.biencoder import BiEncoderConfig, contrastive_loss, encode, init_biencoder
 from repro.optim import adamw_init, adamw_update
 
 CFG = BiEncoderConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=256,

@@ -1,7 +1,7 @@
 """PCA table compression (beyond-paper recsys integration)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.table_compress import compress_tables, compressed_table_bytes
 from repro.models.recsys import RecsysConfig, init_recsys, item_embedding
