@@ -58,6 +58,18 @@ LIVE_APPEND_RATES = {"append_0": 0.0, "append_low": 256.0,
 # intractable per-candidate tax at these shortlist depths off-TPU)
 CASCADE_M_COARSE = (32, 64, 128, 192)
 CASCADE_N_FACTORS = (4, 8, 16, 32, 64)
+# fleet section: replicas, offered rate, and drive lengths. The corpus is
+# unit-norm with self-retrieval queries (query i IS row i) so every
+# successful reply's top-1 id is exactly checkable — "misrouted" is a
+# measured count, not an inference. The kill drive is long enough that the
+# handful of failover-delayed replies around the kill cannot dominate p99.
+FLEET_REPLICAS = 3
+FLEET_RATE = 150.0
+FLEET_N_DOCS = 4096
+FLEET_DIM = 64
+N_FLEET_HEALTHY = 512
+N_FLEET_KILL = 1536
+N_FLEET_ROLLOUT = 512
 
 
 def _bench(fn, *args, iters: int = ITERS) -> float:
@@ -583,6 +595,109 @@ def _cascade(Dh, pruner, Q_raw, emit) -> dict:
                 rows=rows)
 
 
+def _fleet(emit) -> dict:
+    """Replicated fleet under chaos: the three tracked drives.
+
+      * ``healthy``      — R replicas, open-loop Poisson, no faults: the
+                           p99 baseline the fault drives are held against.
+      * ``kill_restart`` — replica r1 is crash-injected mid-drive and
+                           restarted later; the schema gate requires zero
+                           lost accepted replies, zero misrouted replies,
+                           and p99 within 2x the healthy baseline (the
+                           failover cohort is a fixed handful of requests,
+                           so a long enough drive keeps it out of p99).
+      * ``bad_rollout``  — a recall-regressing artifact (same corpus,
+                           shuffled row ids) is rolled out mid-drive; the
+                           health gate must roll the whole fleet back and
+                           no live reply may ever have been served by the
+                           bad index (top-1 self-retrieval makes every
+                           reply checkable).
+    """
+    import threading as _threading
+
+    from repro.launch.serve import _drive_open
+    from repro.serving.fleet import FaultEvent, FaultPlan
+    from repro.serving.soak import _unit_corpus, build_fleet
+
+    def drive_row(fleet, D, n, *, seed, plan=None, rollout_to=None):
+        rng = np.random.default_rng(seed)
+        qids = rng.integers(0, len(D), size=n)
+        rollout_result = {}
+        threads = []
+        if plan is not None:
+            threads.append(plan.start(fleet))
+        if rollout_to is not None:
+            def _roll():
+                time.sleep(1.0)
+                rollout_result.update(fleet.rollout(rollout_to))
+            th = _threading.Thread(target=_roll, daemon=True)
+            th.start()
+            threads.append(th)
+        res = _drive_open(fleet, D[qids], rate=FLEET_RATE, seed=seed,
+                          collect=True, tolerate_errors=True, deadline=2.0)
+        for th in threads:
+            th.join(timeout=60.0)
+        misrouted = sum(
+            1 for i, out in enumerate(res.pop("results"))
+            if isinstance(out, tuple)
+            and int(np.asarray(out[1])[0]) != int(qids[i]))
+        stats = fleet.stats()
+        row = dict(n=res["n"], n_ok=res["n_ok"], errors=res["errors"],
+                   achieved_qps=res["achieved_qps"],
+                   p50_ms=res["p50_ms"], p95_ms=res["p95_ms"],
+                   p99_ms=res["p99_ms"], misrouted=misrouted,
+                   accepted=stats["accepted"], shed=stats["shed"],
+                   timed_out=stats["timed_out"], failed=stats["failed"],
+                   failovers=stats["failovers"],
+                   lost_accepted=stats["lost_accepted"],
+                   health_ok=bool(fleet.health()["ok"]))
+        if rollout_result:
+            row["rolled_back"] = bool(rollout_result.get("rolled_back"))
+        return row
+
+    tmpdir = tempfile.mkdtemp(prefix="bench_fleet_")
+    try:
+        fleet, D = build_fleet(os.path.join(tmpdir, "v1"),
+                               n_docs=FLEET_N_DOCS, dim=FLEET_DIM,
+                               replicas=FLEET_REPLICAS)
+        try:
+            out = {"replicas": FLEET_REPLICAS, "rate": FLEET_RATE}
+            out["healthy"] = drive_row(fleet, D, N_FLEET_HEALTHY, seed=1)
+            emit(f"fleet_healthy,{out['healthy']['p99_ms']*1e3:.0f},"
+                 f"qps={out['healthy']['achieved_qps']:.1f} "
+                 f"ok={out['healthy']['n_ok']}/{out['healthy']['n']}")
+
+            t_kill = 0.3 * (N_FLEET_KILL / FLEET_RATE)
+            plan = FaultPlan([FaultEvent(t_kill, "kill", "r1"),
+                              FaultEvent(2.0 * t_kill, "restart", "r1")])
+            out["kill_restart"] = drive_row(fleet, D, N_FLEET_KILL,
+                                            seed=2, plan=plan)
+            kr = out["kill_restart"]
+            emit(f"fleet_kill_restart,{kr['p99_ms']*1e3:.0f},"
+                 f"lost={kr['lost_accepted']} misrouted={kr['misrouted']} "
+                 f"failovers={kr['failovers']} ok={kr['n_ok']}/{kr['n']}")
+
+            # recall-regressing artifact: identical rows, shuffled order —
+            # every id the bad index would return is wrong
+            from repro.core import StaticPruner as _SP
+            perm = np.random.default_rng(3).permutation(len(D))
+            prb = _SP(cutoff=0.5).fit(jnp.asarray(D[perm]))
+            save_index(os.path.join(tmpdir, "v_bad"),
+                       prb.build_index(jnp.asarray(D[perm])), pruner=prb)
+            out["bad_rollout"] = drive_row(
+                fleet, D, N_FLEET_ROLLOUT, seed=4,
+                rollout_to=os.path.join(tmpdir, "v_bad"))
+            br = out["bad_rollout"]
+            emit(f"fleet_bad_rollout,{br['p99_ms']*1e3:.0f},"
+                 f"rolled_back={br.get('rolled_back')} "
+                 f"misrouted={br['misrouted']} lost={br['lost_accepted']}")
+            return out
+        finally:
+            fleet.close()
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
+
+
 def run(emit=print) -> dict:
     # structured corpus (trained-encoder spectral regime) — recall under
     # pruning is meaningless on isotropic gaussians
@@ -655,6 +770,11 @@ def run(emit=print) -> dict:
     # cascade Pareto: two-stage coarse scan -> exact shortlist rescore vs
     # the single-resolution full-m worker, same open-loop harness
     results["cascade"] = _cascade(Dh, pruner, np.asarray(Q), emit)
+
+    # replicated fleet under chaos: healthy baseline, kill/restart, and a
+    # recall-regressing rollout — droplessness/misroute/rollback invariants
+    # enforced by benchmarks.run's schema gate before BENCH_perf.json lands
+    results["fleet"] = _fleet(emit)
 
     # cold start: committed on-disk artifact -> first answered query — the
     # restart path ``serve.py --load-index`` takes. One-shot by nature

@@ -32,6 +32,13 @@ _LIVE_APPEND_KEYS = ("appended_rows", "swaps", "recompiles_steady")
 # single-resolution baseline row must anchor the comparison, and the
 # steady-state recompile count must be zero (fixed-nk cascade contract)
 _CASCADE_ROW_KEYS = ("recall_at_10", "worker_qps", "recompiles_steady")
+# fleet chaos rows: every drive reports its latency tier plus the
+# droplessness/misroute accounting; the kill and rollout drives carry hard
+# robustness invariants (zero lost accepted replies, zero misrouted
+# replies, rollback on regression, p99 held vs the healthy baseline)
+_FLEET_ROWS = ("healthy", "kill_restart", "bad_rollout")
+_FLEET_ROW_KEYS = ("n", "n_ok", "p50_ms", "p99_ms", "lost_accepted",
+                   "misrouted", "health_ok")
 
 
 def check_perf_schema(results: dict) -> None:
@@ -98,6 +105,40 @@ def check_perf_schema(results: dict) -> None:
                 f"cascade.{name}: {row['recompiles_steady']} steady-state "
                 f"recompiles — with nk fixed, every cascade dispatch must "
                 f"reuse its compiled shape")
+    fl = results.get("fleet")
+    if not isinstance(fl, dict):
+        raise SystemExit("BENCH_perf.json schema: missing 'fleet' section")
+    for rowname in _FLEET_ROWS:
+        row = fl.get(rowname)
+        if not isinstance(row, dict):
+            raise SystemExit(f"fleet: missing '{rowname}' drive row")
+        missing = [k for k in _FLEET_ROW_KEYS if k not in row]
+        if missing:
+            raise SystemExit(f"fleet.{rowname}: missing keys {missing}")
+        if row["lost_accepted"] != 0:
+            raise SystemExit(
+                f"fleet.{rowname}: {row['lost_accepted']} accepted replies "
+                f"never got a terminal payload — the router dropped "
+                f"accepted work (droplessness invariant)")
+        if row["misrouted"] != 0:
+            raise SystemExit(
+                f"fleet.{rowname}: {row['misrouted']} replies answered with "
+                f"wrong ids — a reply was served by an unvalidated or "
+                f"stale index (misroute invariant)")
+        if not row["health_ok"]:
+            raise SystemExit(f"fleet.{rowname}: fleet unhealthy after the "
+                             f"drive (a replica never rejoined, or a "
+                             f"background maintenance thread died)")
+    if not fl["bad_rollout"].get("rolled_back"):
+        raise SystemExit("fleet.bad_rollout: the recall-regressing rollout "
+                         "was NOT rolled back — the health gate is dead")
+    p99_healthy = fl["healthy"]["p99_ms"]
+    p99_kill = fl["kill_restart"]["p99_ms"]
+    if p99_kill > 2.0 * max(p99_healthy, 1.0):
+        raise SystemExit(
+            f"fleet.kill_restart: p99 {p99_kill:.1f}ms vs healthy "
+            f"{p99_healthy:.1f}ms — a single replica kill/restart must not "
+            f"double the latency tier (failover is supposed to contain it)")
 
 
 def main() -> None:

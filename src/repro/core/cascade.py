@@ -218,10 +218,15 @@ class CascadeIndex:
         full resolution, the ``m_coarse`` resolution entry the coarse one
         (``m_coarse=None`` picks the widest stored resolution).
 
-        A stored resolution covers the immutable BASE rows only; on a
-        segmented load the coarse deltas are re-derived from the full
-        deltas' (dequantised) rows, so the pair stays row-aligned however
-        far the store has grown.
+        On a segmented load the coarse deltas rehydrate from the
+        resolution's PERSISTED delta segments when the store carries them
+        (``save_index`` on a segmented cascade writes the exact quantised
+        bytes + per-delta scales, so the reload is bit-identical to what
+        was serving). A store without them — or one whose main deltas have
+        grown past the persisted coarse view — falls back to re-deriving
+        (requantising) the coarse deltas from the full deltas' dequantised
+        rows, so the pair stays row-aligned however far the store has
+        grown.
         """
         from repro.core.store import IndexStore, IndexStoreError
         if isinstance(store, (str, os.PathLike)):
@@ -243,13 +248,25 @@ class CascadeIndex:
             view = by_m[m_coarse]
         coarse = DenseIndex.load(view, backend=backend)
         if segmented:
+            from repro.core.index import rehydrate_delta
             full = SegmentedIndex.load(store, backend=backend,
                                        delta_capacity=delta_capacity)
             coarse = SegmentedIndex.from_index(
                 coarse, delta_capacity=delta_capacity)
-            for d in full.deltas:
-                if d.n_real:
-                    coarse = coarse.append(d.raw[:, :coarse.dim])
+            dviews = store.resolution_deltas(view.name)
+            if dviews and ([v.n for v in dviews]
+                           == [d.n_real for d in full.deltas]):
+                # persisted coarse deltas mirror the main ones row-for-row:
+                # rehydrate the exact quantised bytes (no requantisation)
+                coarse = dataclasses.replace(
+                    coarse, deltas=tuple(rehydrate_delta(v, delta_capacity)
+                                         for v in dviews))
+            else:
+                # legacy artifact (or the main store grew past the persisted
+                # view): re-derive coarse deltas from the full deltas
+                for d in full.deltas:
+                    if d.n_real:
+                        coarse = coarse.append(d.raw[:, :coarse.dim])
         else:
             full = DenseIndex.load(store, backend=backend)
         return cls(coarse=coarse, full=full, n_factor=n_factor)

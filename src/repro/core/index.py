@@ -727,6 +727,27 @@ class DeltaSegment:
             raw=raw), False, new_rows
 
 
+def rehydrate_delta(view, delta_capacity: int) -> DeltaSegment:
+    """Rebuild one ``DeltaSegment`` from a store view (a main delta OR a
+    persisted coarse-resolution delta): the stored quantised bytes become
+    the served bytes bit-for-bit, padded to the stored capacity; ``raw``
+    is the dequantised reconstruction — the best requant source that
+    survives a restart."""
+    rows = view.read_rows(0, view.n)
+    s = view.scale()
+    if s is not None:
+        raw = rows.astype(np.float32) * s[None, :].astype(np.float32)
+    else:
+        raw = rows.astype(np.float32)
+    cap = int(view.capacity) if view.capacity else max(delta_capacity,
+                                                       view.n)
+    stored = np.zeros((cap, view.dim), rows.dtype)
+    stored[:view.n] = rows
+    return DeltaSegment(vectors=jnp.asarray(stored), n_real=view.n,
+                        scale=None if s is None else jnp.asarray(s),
+                        raw=np.ascontiguousarray(raw))
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentedIndex:
     """Immutable segment set: [base] + deltas, searched as one index.
@@ -774,21 +795,7 @@ class SegmentedIndex:
                                           merge=merge)
         else:
             base = DenseIndex.load(base_view, backend=backend)
-        deltas = []
-        for v in views[1:]:
-            rows = v.read_rows(0, v.n)
-            s = v.scale()
-            if s is not None:
-                raw = rows.astype(np.float32) * s[None, :].astype(np.float32)
-            else:
-                raw = rows.astype(np.float32)
-            cap = int(v.capacity) if v.capacity else max(delta_capacity, v.n)
-            stored = np.zeros((cap, v.dim), rows.dtype)
-            stored[:v.n] = rows
-            deltas.append(DeltaSegment(
-                vectors=jnp.asarray(stored), n_real=v.n,
-                scale=None if s is None else jnp.asarray(s),
-                raw=np.ascontiguousarray(raw)))
+        deltas = [rehydrate_delta(v, delta_capacity) for v in views[1:]]
         return cls(base=base, deltas=tuple(deltas),
                    delta_capacity=delta_capacity)
 

@@ -114,6 +114,11 @@ class IndexUpdater:
     # telemetry
     appended_rows: int = 0
     compactions: int = 0
+    # background-thread failures (compact_async and any future maintenance
+    # thread): a swallowed exception is an operational lie — the fleet
+    # health check reads this list, so a dead compaction surfaces instead
+    # of silently leaving the deltas to grow forever
+    background_errors: list = dataclasses.field(default_factory=list)
     _lock: threading.RLock = dataclasses.field(default_factory=_new_rlock,
                                                repr=False, compare=False)
 
@@ -395,10 +400,36 @@ class IndexUpdater:
 
     def compact_async(self, **kw) -> threading.Thread:
         """Run ``compact`` off-thread: the serving path keeps dispatching
-        against the old segment set until the finished base swaps in."""
-        th = threading.Thread(target=self.compact, kwargs=kw, daemon=True)
+        against the old segment set until the finished base swaps in.
+
+        A crash in the background thread is RECORDED, not swallowed: the
+        exception lands in ``background_errors`` (read by ``health()`` and
+        the fleet's rollout/auto-compaction health checks), so a dead
+        compaction can fail a health probe instead of leaving the deltas
+        to grow unboundedly with nobody the wiser."""
+        def _run():
+            import time as _time
+            try:
+                self.compact(**kw)
+            except BaseException as e:   # noqa: BLE001 — recorded, re-raised
+                with self._lock:
+                    self.background_errors.append(
+                        {"op": "compact", "error": repr(e),
+                         "time": _time.time()})
+                raise
+        th = threading.Thread(target=_run, daemon=True)
         th.start()
         return th
+
+    def health(self) -> dict:
+        """Maintenance health snapshot: ok iff no background thread has
+        died. ``background_errors`` is a copy — callers can't tear it."""
+        with self._lock:
+            errs = list(self.background_errors)
+            compactions = self.compactions
+            appended = self.appended_rows
+        return {"ok": not errs, "background_errors": errs,
+                "compactions": compactions, "appended_rows": appended}
 
     def refit(self, corpus: jax.Array) -> None:
         """Full offline refit (new rotation) on the current corpus

@@ -45,12 +45,15 @@ building a fresh base) reuses ``checkpoint.manager.commit_dir``.
 ``m < dim`` PCA columns (dims nest, so no second projection state exists),
 usually re-quantised int8 with their own scale. Each entry reuses the
 chunked-blob layout (``chunks`` + optional ``scale_file`` + its own
-``dtype``) and covers exactly the immutable BASE segment's rows: delta
-segments grow only the full-resolution store, and a live cascade derives
-coarse delta rows from the full deltas at load/append time. ``open``
-refuses a resolution whose row count disagrees with the base or whose m
-does not nest strictly inside ``dim`` — a mismatched pair would silently
-rescore the wrong rows.
+``dtype``) and covers exactly the immutable BASE segment's rows. A
+segmented cascade's coarse DELTA segments may ride along in the entry's
+``deltas`` list (same per-delta layout as the main segments: exact
+quantised rows + own scale + capacity), so a reload serves the very bytes
+that were serving before instead of requantising from the full deltas;
+a store whose main deltas outgrow the persisted coarse view falls back to
+re-derivation at load. ``open`` refuses a resolution whose row count
+disagrees with the base or whose m does not nest strictly inside ``dim``
+— a mismatched pair would silently rescore the wrong rows.
 
 Reads are host-streamed: chunks are memory-mapped (``np.load(mmap_mode=
 'r')``), so assembling a device-resident index never needs a second full
@@ -69,7 +72,7 @@ import dataclasses
 import json
 import os
 import shutil
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -106,15 +109,24 @@ def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
     if isinstance(index, CascadeIndex):
         # full resolution commits through the normal (possibly segmented)
         # path; the coarse base rides along as a `resolutions` entry, so
-        # one artifact round-trips the whole cascade via CascadeIndex.load
+        # one artifact round-trips the whole cascade via CascadeIndex.load.
+        # A segmented coarse side persists its delta segments too (exact
+        # quantised bytes + per-delta scales), so a segmented load
+        # rehydrates them bit-for-bit instead of requantising from the
+        # full deltas.
         store = save_index(path, index.full, pruner=pruner, meta=meta,
                            chunk_rows=chunk_rows)
         coarse_base = getattr(index.coarse, "base", index.coarse)
+        coarse_deltas = [
+            {"rows": _np.asarray(d.vectors[:d.n_real]),
+             "scale": None if d.scale is None else _np.asarray(d.scale),
+             "capacity": d.capacity}
+            for d in getattr(index.coarse, "deltas", ())]
         store.add_resolution(
             _np.asarray(coarse_base.vectors[:coarse_base.n]),
             scale=None if coarse_base.scale is None
             else _np.asarray(coarse_base.scale),
-            chunk_rows=chunk_rows)
+            chunk_rows=chunk_rows, deltas=coarse_deltas)
         return store
     if isinstance(index, SegmentedIndex):
         # base commits through the normal path, then each delta is replayed
@@ -170,6 +182,22 @@ def _read_chunk(path: str, logical: str, mmap: bool = True) -> np.ndarray:
     arr = np.load(path, mmap_mode="r" if mmap else None)
     view = _STORAGE_VIEW.get(logical)
     return arr.view(_as_numpy_dtype(logical)) if view is not None else arr
+
+
+def _read_chunk_validated(store_path: str, fpath: str,
+                          logical: str) -> np.ndarray:
+    """``_read_chunk`` for validate(): a blob whose payload is shorter
+    than its npy header promises (a torn write — crash mid-rollout or
+    mid-copy) must surface as an IndexStoreError diagnosis, not a raw
+    mmap/np.load failure."""
+    try:
+        return _read_chunk(fpath, logical)
+    except IndexStoreError:
+        raise
+    except Exception as e:
+        raise IndexStoreError(
+            f"{store_path}: chunk {os.path.basename(fpath)} is truncated "
+            f"or unreadable ({e}) — partial artifact rejected") from e
 
 
 def _read_rows_from_chunks(path: str, chunks: list, logical: str, dim: int,
@@ -375,7 +403,7 @@ class IndexStore:
             fpath = os.path.join(self.path, c["file"])
             if not os.path.isfile(fpath):
                 raise IndexStoreError(f"{self.path}: missing chunk {c['file']}")
-            arr = _read_chunk(fpath, m["dtype"])
+            arr = _read_chunk_validated(self.path, fpath, m["dtype"])
             if arr.ndim != 2 or arr.shape != (c["rows"], m["dim"]):
                 raise IndexStoreError(
                     f"{self.path}: chunk {c['file']} has shape "
@@ -446,7 +474,7 @@ class IndexStore:
                     raise IndexStoreError(
                         f"{self.path}: resolution {r['name']} missing chunk "
                         f"{c['file']}")
-                arr = _read_chunk(fpath, r["dtype"])
+                arr = _read_chunk_validated(self.path, fpath, r["dtype"])
                 if arr.ndim != 2 or arr.shape != (c["rows"], rm):
                     raise IndexStoreError(
                         f"{self.path}: resolution chunk {c['file']} has "
@@ -464,6 +492,40 @@ class IndexStore:
                 raise IndexStoreError(
                     f"{self.path}: resolution {r['name']} missing scale "
                     f"blob {f}")
+            for d in r.get("deltas", ()):
+                for key in ("name", "n", "capacity", "dtype", "chunks"):
+                    if key not in d:
+                        raise IndexStoreError(
+                            f"{self.path}: resolution delta entry missing "
+                            f"{key!r}")
+                if int(d["n"]) > int(d["capacity"]):
+                    raise IndexStoreError(
+                        f"{self.path}: resolution delta {d['name']} holds "
+                        f"{d['n']} rows over its capacity {d['capacity']}")
+                drows = 0
+                for c in d["chunks"]:
+                    fpath = os.path.join(self.path, c["file"])
+                    if not os.path.isfile(fpath):
+                        raise IndexStoreError(
+                            f"{self.path}: resolution delta {d['name']} "
+                            f"missing chunk {c['file']}")
+                    arr = _read_chunk_validated(self.path, fpath, d["dtype"])
+                    if arr.ndim != 2 or arr.shape != (c["rows"], rm):
+                        raise IndexStoreError(
+                            f"{self.path}: resolution delta chunk "
+                            f"{c['file']} has shape {tuple(arr.shape)}, "
+                            f"manifest says ({c['rows']}, {rm})")
+                    drows += c["rows"]
+                if drows != int(d["n"]):
+                    raise IndexStoreError(
+                        f"{self.path}: resolution delta {d['name']} chunk "
+                        f"rows sum to {drows}, manifest n={d['n']}")
+                sf = d.get("scale_file")
+                if sf is not None and not os.path.isfile(
+                        os.path.join(self.path, sf)):
+                    raise IndexStoreError(
+                        f"{self.path}: resolution delta {d['name']} "
+                        f"missing scale blob {sf}")
 
     # -- shape -------------------------------------------------------------
     @property
@@ -567,17 +629,28 @@ class IndexStore:
 
     def add_resolution(self, vectors: np.ndarray, *,
                        scale: np.ndarray | None = None,
-                       chunk_rows: int = 262144) -> str:
+                       chunk_rows: int = 262144,
+                       deltas: "Sequence[dict]" = ()) -> str:
         """Durably attach a coarse resolution: the (base_n, m) leading-
         column view of the base rows in its storage dtype (int8 rows with
         their own per-dim ``scale``, or f32). Blob-then-manifest-swap like
         every other segment mutation; refuses a duplicate m, a non-nested
-        m, or a row count that disagrees with the base segment."""
+        m, or a row count that disagrees with the base segment.
+
+        ``deltas`` persists a segmented cascade's COARSE delta segments so
+        a segmented load rehydrates them bit-for-bit instead of re-deriving
+        (requantising) from the full deltas: each dict carries ``rows``
+        (the n_real live rows in storage dtype — exactly the bytes served),
+        ``scale`` (per-dim dequant scale or None) and ``capacity`` (the
+        fixed padded dispatch shape). Their row counts must mirror the main
+        delta segments one-for-one — the two views describe the same docs.
+        """
         vectors = np.asarray(vectors)
         if vectors.ndim != 2:
             raise ValueError(f"add_resolution expects (rows, m), got shape "
                              f"{tuple(vectors.shape)}")
-        base_n = int(self._segment_entries()[0]["n"])
+        seg_entries = self._segment_entries()
+        base_n = int(seg_entries[0]["n"])
         n, m = vectors.shape
         if n != base_n:
             raise IndexStoreError(
@@ -587,6 +660,15 @@ class IndexStore:
             raise IndexStoreError(
                 f"{self.path}: resolution m={m} does not nest inside "
                 f"dim={self.dim}")
+        deltas = list(deltas)
+        main_delta_n = [int(s["n"]) for s in seg_entries[1:]]
+        if deltas and [int(np.asarray(d["rows"]).shape[0])
+                       for d in deltas] != main_delta_n:
+            raise IndexStoreError(
+                f"{self.path}: resolution delta rows "
+                f"{[int(np.asarray(d['rows']).shape[0]) for d in deltas]} "
+                f"do not mirror the main delta segments {main_delta_n} — "
+                f"the views would describe different docs")
         manifest = json.loads(json.dumps(self.manifest))   # deep copy
         if any(int(r["m"]) == m for r in manifest.get("resolutions", ())):
             raise IndexStoreError(
@@ -611,9 +693,61 @@ class IndexStore:
                     np.asarray(scale, np.float32))
             fsync_file(os.path.join(self.path, fname))
             entry["scale_file"] = fname
+        if deltas:
+            entry["deltas"] = []
+            for di, d in enumerate(deltas):
+                rows = np.asarray(d["rows"])
+                if rows.ndim != 2 or rows.shape[1] != m:
+                    raise ValueError(
+                        f"resolution delta {di} expects (rows, {m}), got "
+                        f"{tuple(rows.shape)}")
+                dname = f"{name}-delta-{di:03d}"
+                dent = {"name": dname, "n": int(rows.shape[0]),
+                        "capacity": int(d["capacity"]),
+                        "dtype": _logical_dtype_name(rows), "chunks": [],
+                        "scale_file": None}
+                if dent["n"] > dent["capacity"]:
+                    raise IndexStoreError(
+                        f"{self.path}: resolution delta {dname} holds "
+                        f"{dent['n']} rows over its capacity "
+                        f"{dent['capacity']}")
+                if rows.shape[0]:
+                    fname, seq = self._next_blob(f"res_{dname}")
+                    manifest["blob_seq"] = seq
+                    self.manifest["blob_seq"] = seq
+                    _write_chunk(os.path.join(self.path, fname), rows)
+                    dent["chunks"].append({"file": fname,
+                                           "rows": int(rows.shape[0])})
+                ds = d.get("scale")
+                if ds is not None:
+                    fname, seq = self._next_blob(f"scale_{dname}")
+                    manifest["blob_seq"] = seq
+                    self.manifest["blob_seq"] = seq
+                    np.save(os.path.join(self.path, fname),
+                            np.asarray(ds, np.float32))
+                    fsync_file(os.path.join(self.path, fname))
+                    dent["scale_file"] = fname
+                entry["deltas"].append(dent)
         manifest.setdefault("resolutions", []).append(entry)
         self._swap_manifest(manifest)
         return name
+
+    def resolution_deltas(self, name: str) -> list[SegmentView]:
+        """Read handles on a resolution's persisted coarse delta segments
+        (empty for a base-only resolution). ``dim`` is the resolution's m;
+        offsets continue from the base rows in delta order, mirroring the
+        main segment layout."""
+        for r in self.manifest.get("resolutions", ()):
+            if r["name"] == name:
+                views, offset = [], int(self._segment_entries()[0]["n"])
+                for d in r.get("deltas", ()):
+                    views.append(SegmentView(
+                        store_path=self.path, name=d["name"],
+                        kind="resolution-delta", entry=d, offset=offset,
+                        dim=int(r["m"]), dtype_name=d["dtype"]))
+                    offset += int(d["n"])
+                return views
+        raise IndexStoreError(f"{self.path}: no resolution {name!r}")
 
     @property
     def flat_loadable(self) -> bool:

@@ -96,6 +96,12 @@ from repro.data.synthetic import make_dataset
 from repro.util import force_host_device_count
 
 
+class TimedOut(RuntimeError):
+    """A reply's deadline expired before its batch posted. Delivered as the
+    reply payload (and re-raised by ``query``) — an explicit timeout, never
+    a silently dropped request."""
+
+
 class Reply(queue.Queue):
     """Single-slot reply future for one submitted query.
 
@@ -105,11 +111,32 @@ class Reply(queue.Queue):
     no longer assumes replies complete in submission (FIFO) order: a
     multi-priority scheduler, a mid-drain index swap, or a slow collector
     can reorder/delay observation without corrupting the measurement.
+
+    ``deadline`` (absolute ``perf_counter`` time, or None) lets the server
+    expire the reply with a ``TimedOut`` payload if its batch has not
+    posted in time. Because a reply can then race its own expiry, all
+    delivery goes through ``resolve``: first writer wins, later writers
+    are no-ops — a posted result never overwrites a timeout or vice versa,
+    and nobody ever blocks on the single reply slot.
     """
 
-    def __init__(self):
+    def __init__(self, deadline: float | None = None):
         super().__init__(maxsize=1)
         self.completed_at: float | None = None
+        self.deadline = deadline
+        self.done = False
+        self._claim = threading.Lock()
+
+    def resolve(self, payload, t: float | None = None) -> bool:
+        """Deliver ``payload`` exactly once; returns False if a prior
+        resolution (result, timeout, or worker crash) already won."""
+        with self._claim:
+            if self.done:
+                return False
+            self.done = True
+            self.completed_at = t
+        self.put_nowait(payload)
+        return True
 
 
 class BatchingQueue:
@@ -136,8 +163,9 @@ class BatchingQueue:
         self._items: deque = deque()
         self._cv = threading.Condition()
 
-    def submit(self, qvec: np.ndarray) -> "Reply":
-        reply = Reply()
+    def submit(self, qvec: np.ndarray,
+               deadline: float | None = None) -> "Reply":
+        reply = Reply(deadline=deadline)
         with self._cv:
             self._items.append((qvec, reply))
             self._cv.notify_all()
@@ -251,6 +279,11 @@ class RetrievalServer:
                           None if mean is None else jnp.asarray(mean))
         self._stop = threading.Event()
         self.error: BaseException | None = None   # first worker-thread crash
+        # replies submitted with a deadline, swept by the completer: an
+        # overdue queued request gets an explicit TimedOut payload instead
+        # of parking its client forever behind a hung dispatch
+        self._pending_dl: list[Reply] = []
+        self._dl_lock = threading.Lock()
         if self.pipeline_depth >= 2:
             # bounded in-flight window. The semaphore gates batch ASSEMBLY,
             # not just dispatch: while every slot is busy, requests keep
@@ -284,11 +317,21 @@ class RetrievalServer:
             self._stop.set()
             self.batcher.kick()
             if self.pipeline_depth >= 2:
+                # fail-fast dispatched-but-unposted batches too: their
+                # replies would otherwise wait out their full timeout
+                while True:
+                    try:
+                        it = self._inflight.get_nowait()
+                    except queue.Empty:
+                        break
+                    if it is not None:
+                        for r in it[2]:
+                            r.resolve(e)
                 self._inflight.put(None)   # release a blocked completer
             # fail-fast every queued request: clients get the exception
             # immediately instead of waiting out their reply timeout
             for _, reply in self.batcher.drain():
-                reply.put(e)
+                reply.resolve(e)
             traceback.print_exc()
 
     def _bucket_for(self, b: int) -> int:
@@ -331,14 +374,47 @@ class RetrievalServer:
         return index.search(q, k=self.k)
 
     def _post(self, scores, ids, replies, t0):
-        scores = np.asarray(scores)   # blocks on this batch's D2H only
-        ids = np.asarray(ids)         # (both BEFORE taking any lock)
+        try:
+            scores = np.asarray(scores)   # blocks on this batch's D2H only
+            ids = np.asarray(ids)         # (both BEFORE taking any lock)
+        except BaseException as e:
+            # a poisoned device result must fail ITS batch's clients, not
+            # strand them: resolve in-hand replies before the crash
+            # propagates to _guard
+            t = time.perf_counter()
+            for r in replies:
+                r.resolve(e, t)
+            raise
         t1 = time.perf_counter()
         with self._log_lock:
             self.batch_log.append((len(replies), t0, t1))
         for i, r in enumerate(replies):
-            r.completed_at = t1       # stamp BEFORE the client can wake
-            r.put((scores[i], ids[i]))
+            # first-writer-wins: an already-expired reply keeps its
+            # TimedOut (and the single slot is never double-filled)
+            r.resolve((scores[i], ids[i]), t1)
+
+    # -- deadline expiry ----------------------------------------------------
+    def _dl_poll(self) -> float:
+        """Completer wait quantum: fine-grained while deadlines are
+        pending, coarse (but bounded — a hung stager must not be able to
+        park the sweep forever) when none are."""
+        with self._dl_lock:
+            pending = bool(self._pending_dl)
+        return 0.05 if pending else 0.5
+
+    def _expire_overdue(self) -> None:
+        """Resolve every overdue pending reply with TimedOut. Replies are
+        collected under the deadline lock but resolved OUTSIDE it — reply
+        delivery never runs under a server lock."""
+        now = time.perf_counter()
+        with self._dl_lock:
+            live = [r for r in self._pending_dl if not r.done]
+            due = [r for r in live if r.deadline <= now]
+            self._pending_dl = [r for r in live if r.deadline > now]
+        for r in due:
+            r.resolve(TimedOut(
+                f"reply deadline exceeded ({now - r.deadline:.3f}s overdue) "
+                f"— batch never posted"), now)
 
     def swap_index(self, index, pruner=_KEEP) -> None:
         """Atomically install a new index (segment set) for future batches.
@@ -377,14 +453,32 @@ class RetrievalServer:
 
     # -- synchronous worker (pipeline_depth <= 1) ---------------------------
     def _loop(self):
+        # deadline expiry here is opportunistic (between batches): with one
+        # thread, a dispatch that hangs also hangs the sweep — prompt
+        # in-hang expiry needs pipeline_depth >= 2 (completer-side sweep)
         while not (self._stop.is_set() and self.batcher.empty()):
-            item = self.batcher.next_batch(stop=self._stop)
+            self._expire_overdue()
+            item = self.batcher.next_batch(stop=self._stop,
+                                           timeout=self._dl_poll())
             if item is None:
                 continue
             vecs, replies = item
             t0 = time.perf_counter()
-            scores, ids = self._dispatch(vecs)
+            scores, ids = self._dispatch_guarded(vecs, replies)
             self._post(scores, ids, replies, t0)
+
+    def _dispatch_guarded(self, vecs, replies):
+        """_dispatch, but a crash resolves the in-hand batch's replies with
+        the exception before propagating to _guard — the batch being
+        assembled is accepted work, and accepted work never silently
+        strands its clients."""
+        try:
+            return self._dispatch(vecs)
+        except BaseException as e:
+            t = time.perf_counter()
+            for r in replies:
+                r.resolve(e, t)
+            raise
 
     # -- pipelined worker (stager + completer) ------------------------------
     def _busy(self) -> bool:
@@ -404,7 +498,8 @@ class RetrievalServer:
                 continue
             vecs, replies = item
             t0 = time.perf_counter()
-            scores, ids = self._dispatch(vecs)     # async — does not block
+            # async — does not block
+            scores, ids = self._dispatch_guarded(vecs, replies)
             with self._inflight_lock:
                 self._inflight_n += 1
             self._inflight.put((scores, ids, replies, t0))
@@ -412,10 +507,19 @@ class RetrievalServer:
 
     def _complete_loop(self):
         while True:
-            item = self._inflight.get()
+            try:
+                item = self._inflight.get(timeout=self._dl_poll())
+            except queue.Empty:
+                # nothing posted within the quantum: sweep overdue
+                # deadlines — this is what un-wedges clients of a HUNG
+                # dispatch (the stager is parked inside the device call,
+                # but their deadlines still fire here)
+                self._expire_overdue()
+                continue
             if item is None:
                 return
             self._post(*item)
+            self._expire_overdue()
             with self._inflight_lock:
                 self._inflight_n -= 1
                 idle = self._inflight_n == 0
@@ -432,21 +536,41 @@ class RetrievalServer:
         return proj[0].shape[0] if proj is not None else index.dim
 
     # -- client API ---------------------------------------------------------
-    def submit(self, qvec: np.ndarray) -> "queue.Queue":
+    def submit(self, qvec: np.ndarray,
+               deadline: float | None = None) -> "Reply":
         """Open-loop entry: enqueue a query, return its reply queue.
 
         The shape is validated here, synchronously: a malformed vector must
         fail its submitter, not poison a whole batch inside the worker.
+        ``deadline`` (relative seconds) arms completer-side expiry: if the
+        batch has not posted by then, the reply resolves to ``TimedOut``
+        instead of parking its client behind a hung dispatch. Submitting to
+        an already-crashed server raises immediately.
         """
         qvec = np.asarray(qvec)
+        if self.error is not None:
+            raise RuntimeError("server worker failed") from self.error
         want = self._query_dim()
         if qvec.shape != (want,):
             raise ValueError(f"query must have shape ({want},), "
                              f"got {qvec.shape}")
-        return self.batcher.submit(qvec)
+        abs_dl = (None if deadline is None
+                  else time.perf_counter() + deadline)
+        reply = self.batcher.submit(qvec, deadline=abs_dl)
+        if abs_dl is not None:
+            with self._dl_lock:
+                self._pending_dl.append(reply)
+        if self.error is not None:
+            # the worker died between the check above and the enqueue: the
+            # batcher drain already ran, so fail this reply directly
+            reply.resolve(self.error)
+        return reply
 
-    def query(self, qvec: np.ndarray, timeout: float = 10.0):
-        out = self.submit(qvec).get(timeout=timeout)
+    def query(self, qvec: np.ndarray, timeout: float = 10.0,
+              deadline: float | None = None):
+        out = self.submit(qvec, deadline=deadline).get(timeout=timeout)
+        if isinstance(out, TimedOut):
+            raise out
         if isinstance(out, BaseException):
             raise RuntimeError("server worker failed") from out
         return out
@@ -524,7 +648,9 @@ def _lat_summary(lat_s: np.ndarray) -> dict:
 
 
 def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
-                seed: int = 0, collect: bool = False) -> dict:
+                seed: int = 0, collect: bool = False,
+                tolerate_errors: bool = False,
+                deadline: float | None = None) -> dict:
     """Open-loop load: Poisson arrivals at ``rate`` qps, independent of
     completions.
 
@@ -542,17 +668,27 @@ def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
     Returns achieved/offered qps, p50/p95/p99 latency, and — with
     ``collect`` — the per-query (scores, ids) in submission order, used by
     the bench's sync-vs-pipelined bit-identity check.
+
+    ``tolerate_errors`` is the fault-injection mode (the fleet soak): an
+    exception payload (Shed, TimedOut, a replica crash) or a submit-time
+    rejection counts in ``errors`` instead of failing the drive, and
+    latency percentiles cover the successful replies only —
+    ``n_ok``/``errors`` make the split explicit. ``deadline`` (relative
+    seconds) is forwarded to every submit. Any target duck-typing
+    ``submit``/``query``/``reset_stats`` (a ``Router``) drives the same
+    way a single server does.
     """
     rng = np.random.default_rng(seed)
     server.query(Q[0])
     server.reset_stats()
     n = len(Q)
     gaps = rng.exponential(1.0 / rate, size=n)
-    lat = np.empty(n)
+    lat = np.full(n, np.nan)
     results: list = [None] * n if collect else None
     handoff: queue.Queue = queue.Queue()
     done = threading.Event()
     errors: list = []
+    fails: list = []
 
     def collector():
         # per-reply timeout: a dead worker thread must fail this drive
@@ -560,8 +696,14 @@ def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
         try:
             for _ in range(n):
                 i, reply, t_arr = handoff.get()
+                if isinstance(reply, BaseException):   # rejected at submit
+                    fails.append((i, reply))
+                    continue
                 out = reply.get(timeout=120.0)
                 if isinstance(out, BaseException):
+                    if tolerate_errors:
+                        fails.append((i, out))
+                        continue
                     raise out
                 t_done = getattr(reply, "completed_at", None)
                 lat[i] = (t_done if t_done is not None
@@ -582,18 +724,96 @@ def _drive_open(server: RetrievalServer, Q: np.ndarray, rate: float,
         delay = t_next - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
-        handoff.put((i, server.submit(Q[i]), t_next))
+        try:
+            reply = server.submit(Q[i], deadline=deadline) \
+                if deadline is not None else server.submit(Q[i])
+        except Exception as e:
+            if not tolerate_errors:
+                done.set()
+                raise
+            reply = e
+        handoff.put((i, reply, t_next))
     done.wait()
     if errors:
         raise RuntimeError(
             "open-loop drive failed: a reply never arrived (worker thread "
             "dead?)") from errors[0]
     wall = time.perf_counter() - t_start
+    ok = lat[~np.isnan(lat)]
     out = dict(offered_qps=float(rate), achieved_qps=float(n / wall),
-               wall_s=float(wall), n=int(n), **_lat_summary(lat))
+               wall_s=float(wall), n=int(n), n_ok=int(ok.size),
+               errors=len(fails),
+               **_lat_summary(ok if ok.size else np.array([np.inf])))
     if collect:
         out["results"] = results
     return out
+
+
+def _serve_fleet(args) -> None:
+    """--fleet path: R replicas behind a Router, driven open-loop; with
+    --fleet-kill, a kill/restart fault plan runs mid-drive and the
+    droplessness/misroute invariants are reported."""
+    import tempfile
+
+    # deferred: repro.serving.fleet imports this module
+    from repro.serving.fleet import FaultEvent, FaultPlan, ReplicaSet
+
+    if args.load_index:
+        store_path, ctx = args.load_index, None
+        src_d = int(IndexStore.open(store_path).meta.get("source_dim",
+                                                         args.dim))
+        if src_d != args.dim:
+            print(f"[serve] store was fit at d={src_d}; overriding --dim")
+            args.dim = src_d
+    else:
+        ctx = None if args.save_index else tempfile.TemporaryDirectory()
+        store_path = args.save_index or (ctx.name + "/fleet-store")
+        print(f"[serve] building corpus n={args.n_docs} d={args.dim}")
+        ds = make_dataset("tasb", n_docs=args.n_docs, d=args.dim,
+                          query_sets=("dl19",))
+        pruner = StaticPruner(cutoff=args.cutoff).fit(jnp.asarray(ds.docs))
+        st = save_index(store_path, pruner.build_index(jnp.asarray(ds.docs)),
+                        pruner=pruner)
+        print(f"[serve] artifact: {store_path} "
+              f"({st.nbytes/2**20:.1f} MiB, n={st.n})")
+    ds = make_dataset("tasb", n_docs=256, d=args.dim, query_sets=("dl19",))
+    Q = np.asarray(ds.queries["dl19"])
+    Q = np.tile(Q, (max(1, args.queries // len(Q) + 1), 1))[:args.queries]
+
+    rate = args.open_loop if args.open_loop > 0 else 200.0
+    fleet = ReplicaSet(store_path, replicas=args.fleet, k=args.k,
+                       max_batch=args.batch,
+                       pipeline_depth=args.pipeline_depth,
+                       backend=args.backend, probe_queries=Q[:16])
+    try:
+        print(f"[serve] fleet: {args.fleet} replicas, open loop @ "
+              f"{rate:.0f} qps, {len(Q)} queries")
+        if args.fleet_kill > 0:
+            FaultPlan([FaultEvent(args.fleet_kill, "kill", "r1"),
+                       FaultEvent(args.fleet_kill + 2.0, "restart", "r1")]
+                      ).start(fleet)
+            print(f"[serve] fault plan: kill r1 @ {args.fleet_kill:.1f}s, "
+                  f"restart @ {args.fleet_kill + 2.0:.1f}s")
+        res = _drive_open(fleet, Q, rate=rate, tolerate_errors=True,
+                          deadline=2.0)
+        stats = fleet.stats()
+        health = fleet.health()
+        print(f"[serve] fleet drive: {res['achieved_qps']:.1f} qps achieved "
+              f"({res['n_ok']}/{res['n']} ok)  p50={res['p50_ms']:.2f}ms "
+              f"p95={res['p95_ms']:.2f}ms p99={res['p99_ms']:.2f}ms")
+        print(f"[serve] fleet accounting: accepted={stats['accepted']} "
+              f"completed={stats['completed']} shed={stats['shed']} "
+              f"timed_out={stats['timed_out']} failed={stats['failed']} "
+              f"failovers={stats['failovers']} "
+              f"lost_accepted={stats['lost_accepted']}")
+        states = ", ".join(f"{name}={rep['state']}"
+                           for name, rep in health["replicas"].items())
+        print(f"[serve] fleet health: "
+              f"{'ok' if health['ok'] else 'DEGRADED'} ({states})")
+    finally:
+        fleet.close()
+        if ctx is not None:
+            ctx.cleanup()
 
 
 def main() -> None:
@@ -645,6 +865,16 @@ def main() -> None:
                          "the first M PCA dims (int8) keeps N*k candidates "
                          "per query, then one exact full-m rescore of the "
                          "shortlist (e.g. 64:8)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="R",
+                    help="serve through a replicated fleet of R servers "
+                         "behind a load-aware router (admission control, "
+                         "retry-with-failover, health-gated maintenance) "
+                         "instead of one bare server")
+    ap.add_argument("--fleet-kill", type=float, default=0.0, metavar="SEC",
+                    help="with --fleet: kill replica r1 SEC seconds into "
+                         "the drive and restart it 2s later — prints the "
+                         "droplessness/misroute accounting the chaos soak "
+                         "asserts")
     ap.add_argument("--save-index", default=None, metavar="DIR",
                     help="persist the built artifact (PCA state + pruned "
                          "vectors + int8 scale) to DIR for later "
@@ -670,6 +900,13 @@ def main() -> None:
             ap.error("--cascade M and N must both be >= 1")
 
     force_host_device_count(args.host_devices or (4 if args.sharded else 0))
+
+    if args.fleet > 0:
+        if args.sharded or args.cascade or args.live_append > 0:
+            ap.error("--fleet composes with the single-node flat index only "
+                     "(sharded/cascade fleet replicas: see ROADMAP)")
+        _serve_fleet(args)
+        return
 
     if args.load_index:
         # peek at the artifact for the query dimensionality, synthesise the

@@ -1,0 +1,11 @@
+"""Replicated serving: a health-checked fleet of RetrievalServers."""
+
+from repro.serving.fleet import (AutoCompactPolicy, FaultEvent, FaultPlan,
+                                 FaultState, FaultableIndex, HealthPolicy,
+                                 NoHealthyReplica, Replica, ReplicaCrash,
+                                 ReplicaSet, Router, Shed, corrupt_artifact)
+
+__all__ = ["AutoCompactPolicy", "FaultEvent", "FaultPlan", "FaultState",
+           "FaultableIndex", "HealthPolicy", "NoHealthyReplica", "Replica",
+           "ReplicaCrash", "ReplicaSet", "Router", "Shed",
+           "corrupt_artifact"]

@@ -189,8 +189,9 @@ def test_cascade_store_roundtrip_dense(tmp_path, quant):
 
 def test_cascade_store_roundtrip_segmented(tmp_path):
     """A grown cascade persists through the store: the stored resolution
-    covers the base rows, coarse deltas are re-derived from the full
-    deltas on load, and the pair stays row-aligned."""
+    covers the base rows, coarse deltas rehydrate from their PERSISTED
+    segments (exact quantised bytes — no requantisation on load), and
+    the pair stays row-aligned."""
     k, n = 8, 300
     pruned, W, mean, Q = _fixture(n=n)
     cas = CascadeIndex.build(pruned, m_coarse=pruned.shape[1] // 2,
@@ -203,9 +204,8 @@ def test_cascade_store_roundtrip_segmented(tmp_path):
                                n_factor=cas.n_factor, segmented=True,
                                delta_capacity=64)
     assert loaded.n == cas.n and loaded.coarse.n == loaded.full.n
-    # coarse delta numerics are requantised fresh on load; at covering
-    # depth the shortlist still spans every row, so ids/scores match the
-    # full-resolution search exactly
+    # at covering depth the shortlist spans every row, so ids/scores
+    # match the full-resolution search exactly
     s0, i0 = loaded.full.search_projected(Q, W, k=k, mean=mean)
     s1, i1 = loaded.search_projected(Q, W, k=k, mean=mean)
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
@@ -282,3 +282,60 @@ def test_cascade_load_requires_matching_resolution(tmp_path):
     store, _ = _cascade_store(tmp_path)
     with pytest.raises(IndexStoreError, match="no m="):
         CascadeIndex.load(store, m_coarse=3)
+
+
+def test_cascade_store_persists_coarse_deltas_bit_parity(tmp_path):
+    """Satellite regression: a segmented cascade's coarse deltas persist
+    in the store as exact quantised bytes + per-delta scales, and a
+    segmented load rehydrates them BIT-identically — no requantisation
+    from the full deltas on the load path."""
+    k, n = 8, 300
+    pruned, W, mean, Q = _fixture(n=n)
+    cas = CascadeIndex.build(pruned, m_coarse=pruned.shape[1] // 2,
+                             n_factor=_full_nf(n + 48, k),
+                             quantize_int8=True).segmented(delta_capacity=64)
+    for seed in (1, 2):
+        cas = cas.append(np.random.default_rng(seed)
+                         .standard_normal((24, pruned.shape[1]))
+                         .astype(np.float32))
+    store = save_index(str(tmp_path / "st"), cas)
+    name = store.manifest["resolutions"][0]["name"]
+    dviews = store.resolution_deltas(name)
+    assert dviews, "segmented save must persist the coarse delta segments"
+    assert [v.n for v in dviews] == [d.n_real for d in cas.coarse.deltas]
+    loaded = CascadeIndex.load(store, m_coarse=cas.m_coarse,
+                               n_factor=cas.n_factor, segmented=True,
+                               delta_capacity=64)
+    for mem, got in zip(cas.coarse.deltas, loaded.coarse.deltas):
+        np.testing.assert_array_equal(
+            np.asarray(mem.vectors[:mem.n_real]),
+            np.asarray(got.vectors[:got.n_real]))
+        assert (mem.scale is None) == (got.scale is None)
+        if mem.scale is not None:
+            np.testing.assert_array_equal(np.asarray(mem.scale),
+                                          np.asarray(got.scale))
+    s0, i0 = cas.search_projected(Q, W, k=k, mean=mean)
+    s1, i1 = loaded.search_projected(Q, W, k=k, mean=mean)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_store_rejects_misaligned_resolution_deltas(tmp_path):
+    """Coarse delta rows must mirror the main delta segments one-for-one
+    — otherwise the two views would describe different docs."""
+    pruned, W, mean, Q = _fixture(n=200)
+    cas = CascadeIndex.build(pruned, m_coarse=pruned.shape[1] // 2,
+                             n_factor=2,
+                             quantize_int8=True).segmented(delta_capacity=64)
+    cas = cas.append(RNG.standard_normal((16, pruned.shape[1]))
+                     .astype(np.float32))
+    store = save_index(str(tmp_path / "full-only"), cas.full)
+    mc = cas.m_coarse
+    base = np.asarray(cas.coarse.base.vectors[:cas.coarse.base.n])
+    scale = np.asarray(cas.coarse.base.scale)
+    with pytest.raises(IndexStoreError, match="mirror"):
+        store.add_resolution(base, scale=scale, deltas=[
+            {"rows": np.zeros((3, mc), np.int8), "scale": None,
+             "capacity": 64}])
+    with pytest.raises(IndexStoreError, match="no resolution"):
+        store.resolution_deltas("m999")

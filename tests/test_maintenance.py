@@ -1,6 +1,7 @@
 """Index maintenance: incremental adds + drift-triggered refit policy."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.maintenance import IndexUpdater, captured_energy
 from repro.core.pruning import StaticPruner
@@ -216,3 +217,30 @@ def test_reference_energy_cached_once_and_refit_coherent():
     assert up.fit_energy is not None and up.fit_energy != ref
     assert abs(up.drift_score(D2) - captured_energy(D2, up.pruner)
                / up.fit_energy) < 1e-9
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_background_compaction_failure_surfaces_in_health(monkeypatch):
+    """A compact_async thread that dies must be RECORDED, not swallowed:
+    health() flips to not-ok and carries the error, so a fleet health
+    probe can see the dead maintenance thread. (The background re-raise is
+    part of the loud-death contract — the thread warning is expected.)"""
+    D = _corpus(n=400)
+    up = IndexUpdater.build(D, cutoff=0.5)
+    up.add_documents(_corpus(seed=3, n=80, domain_seed=4)[:40])
+    assert up.health()["ok"]
+
+    def boom(**kw):
+        raise RuntimeError("disk full mid-compaction")
+
+    monkeypatch.setattr(up, "compact", boom)
+    th = up.compact_async()
+    th.join(timeout=60.0)
+    health = up.health()
+    assert not health["ok"]
+    assert health["background_errors"][0]["op"] == "compact"
+    assert "disk full" in health["background_errors"][0]["error"]
+    # serving-path reads still work: the failure is visible, not fatal
+    _, ids = up.search(D[:2], k=3)
+    assert np.asarray(ids).shape == (2, 3)

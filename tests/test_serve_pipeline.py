@@ -293,3 +293,82 @@ def test_batching_queue_empty_tracks_submit_and_drain():
     assert not bq.empty()
     assert len(bq.drain()) == 1
     assert bq.empty()
+
+
+# ---------------------------------------------------------------------------
+# deadlines: completer-side expiry of overdue queued work
+# ---------------------------------------------------------------------------
+
+
+def test_reply_resolve_first_writer_wins():
+    """A reply racing its own expiry must deliver exactly one payload:
+    later writers are no-ops and the completion stamp is the winner's."""
+    from repro.launch.serve import Reply, TimedOut
+    r = Reply(deadline=None)
+    assert r.resolve(("scores", "ids"), 1.5)
+    assert not r.resolve(TimedOut("late expiry"), 9.9)
+    assert r.get(timeout=1.0) == ("scores", "ids")
+    assert r.completed_at == 1.5
+    assert r.empty()                  # exactly one payload ever posted
+
+
+def test_deadline_noop_on_fast_path(served):
+    """A generous deadline must not perturb a healthy request."""
+    D, pruner, index = served
+    server = RetrievalServer(index, pruner, k=1, max_batch=4)
+    try:
+        scores, ids = server.query(D[3], deadline=30.0)
+        assert int(np.asarray(ids)[0]) == 3
+    finally:
+        server.close()
+
+
+def test_deadline_expires_overdue_work_behind_hung_dispatch(served):
+    """A hung dispatch must NOT park deadline-carrying clients forever:
+    the completer sweep resolves them with an explicit TimedOut while the
+    batch is still stuck, and the server recovers once the hang clears."""
+    from repro.launch.serve import TimedOut
+    from repro.serving.fleet import FaultableIndex
+
+    D, pruner, index = served
+    faultable = FaultableIndex(index)
+    server = RetrievalServer(faultable, pruner, k=1, max_batch=4)
+    try:
+        server.query(D[0])                       # warm/compile first
+        faultable.state.inject("hang")
+        t0 = time.perf_counter()
+        reply = server.submit(D[1], deadline=0.3)
+        out = reply.get(timeout=30.0)
+        took = time.perf_counter() - t0
+        assert isinstance(out, TimedOut)
+        assert took < 5.0, f"expiry took {took:.1f}s for a 0.3s deadline"
+        # un-hang: the stuck batch completes, its late result is a no-op
+        # (first-writer-wins), and fresh queries serve normally again
+        faultable.state.clear()
+        scores, ids = server.query(D[2], timeout=30.0)
+        assert int(np.asarray(ids)[0]) == 2
+        assert server.error is None
+    finally:
+        faultable.state.clear()
+        server.close()
+
+
+def test_deadline_expired_before_batch_never_wastes_dispatch(served):
+    """Already-expired work must resolve TimedOut without requiring the
+    worker to execute it (queued behind a hang, deadline long past)."""
+    from repro.launch.serve import TimedOut
+    from repro.serving.fleet import FaultableIndex
+
+    D, pruner, index = served
+    faultable = FaultableIndex(index)
+    server = RetrievalServer(faultable, pruner, k=1, max_batch=2)
+    try:
+        server.query(D[0])
+        faultable.state.inject("hang")
+        server.submit(D[1])                      # wedges the worker
+        replies = [server.submit(D[i], deadline=0.2) for i in (2, 3, 4)]
+        outs = [r.get(timeout=30.0) for r in replies]
+        assert all(isinstance(o, TimedOut) for o in outs)
+    finally:
+        faultable.state.clear()
+        server.close()

@@ -481,3 +481,16 @@ def test_append_crash_window_leaves_valid_store(tmp_path):
             np.zeros((5, 16), np.float32))
     re = IndexStore.open(st.path)   # orphan blob ignored
     assert re.n == 300
+
+
+def test_truncated_chunk_rejected(tmp_path):
+    """A torn write (crash mid-rollout/copy: npy header intact, payload
+    short) must be rejected by open() as an IndexStoreError diagnosis,
+    not surface as a raw mmap failure."""
+    D = _corpus(300, 16)
+    st = save_index(str(tmp_path / "st"), DenseIndex.build(D))
+    f = os.path.join(st.path, st.manifest["chunks"][0]["file"])
+    with open(f, "r+b") as fh:
+        fh.truncate(os.path.getsize(f) // 2)
+    with pytest.raises(IndexStoreError, match="truncated"):
+        IndexStore.open(st.path)
