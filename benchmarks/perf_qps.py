@@ -7,6 +7,10 @@
     over PR (written by ``benchmarks.run``)
   * select-path A/B: the two-stage + block-skip ``_scan_topk`` against the
     legacy concat-and-full-top_k select on the same corpus
+  * paged: paged-vs-segmented serve qps under live appends, the Pallas
+    DMA pipeline depth sweep (resident vs oversubscribed, host-tier
+    streaming), the zero-recompile page-count lifecycle, and the per-row
+    block-skip guard A/B
   * serve_pipeline: sync vs pipelined RetrievalServer under open-loop
     (Poisson) load — worker qps, p50/p95/p99 latency, occupancy, and a
     bit-identity check between the two workers per config
@@ -52,6 +56,14 @@ LIVE_APPEND_BLOCK = 128
 LIVE_DELTA_CAP = 16384
 LIVE_APPEND_RATES = {"append_0": 0.0, "append_low": 256.0,
                      "append_high": 2048.0}   # rows/s
+# paged section: page geometry, DMA pipeline depths, and the append blocks
+# (in pruned m-dim rows) that walk the page count up during the
+# zero-recompile sweep
+PAGED_PAGE_ROWS = 256
+PAGED_DEPTHS = (1, 2, 4)
+PAGED_SWEEP_ROWS = (64, 128, 192, 256, 320)
+PAGED_SWEEP_PAGE_ROWS = 64
+PAGED_SWEEP_SEAL_ROWS = 128
 # cascade section: coarse widths x shortlist depths (N*k candidates per
 # query) x full-resolution dtypes; the coarse pass is always int8 and the
 # rows serve through the jnp backend (interpret-mode pallas pays an
@@ -488,6 +500,243 @@ def _live_index(Dh, pruner, Q_raw, emit) -> dict:
                 configs=configs)
 
 
+def _paged(Dh, pruner, Q_raw, emit) -> dict:
+    """Paged index memory: the four tracked claims, one subsection each.
+
+      * ``configs`` — paged vs segmented serve qps at append rates
+        {0, high} on the live-append harness: per dtype, the same Poisson
+        tape at the same offered rate (0.8x the dense fused capacity)
+        drives four servers — ``{segmented, paged} x {append_0,
+        append_high}`` — with a background ``IndexUpdater`` supplying the
+        appends.  Every row reports the steady-state jit-compile count;
+        the schema gate pins it to ZERO (paged appends are page-pointer
+        swaps at fixed dispatch shapes — growth must never stall serving
+        on a compile).
+      * ``depth_sweep`` — DMA/compute overlap through the interpreted
+        Pallas paged kernel at pipeline depth {1, 2, 4}, fully resident
+        vs oversubscribed (pool capped at half the index, overflow on the
+        host tier), with a bit-identity check between the two residencies
+        at each depth (streaming must change throughput, never results).
+      * ``oversubscription`` — the headline row: best depth>=2
+        oversubscribed qps as a fraction of fully resident.  The schema
+        floor is 0.80 — host-tier staging has to hide behind compute once
+        the pipeline is at least double-buffered.
+      * ``page_count_sweep`` — full lifecycle (append -> search ->
+        promote -> compact -> search) at growing page counts, ``jnp``
+        backend: the page count is data ([lo, hi) slot bounds are
+        traced), so the compiled-variant count must not move.
+      * ``guard_ab`` — the per-row block-skip guard (masked merge) vs the
+        legacy whole-batch guard on the same blocked scan, asserted
+        bit-identical (the guard is an optimisation, never a result).
+    """
+    from repro.core.index import SegmentedIndex, segment_jit_cache_size
+    from repro.core.maintenance import IndexUpdater
+    from repro.core.paged import PagedIndex
+    from repro.launch.serve import RetrievalServer, _drive_open
+    d_raw = int(pruner.state.d)
+    Q = np.asarray(Q_raw)
+    Qs = np.tile(Q, (N_LIVE // len(Q) + 1, 1))[:N_LIVE]
+    W, mean = pruner.projection()
+    rng = np.random.default_rng(17)
+
+    # -- paged vs segmented under live appends ------------------------------
+    configs = {}
+    for dtype in ("f32", "int8"):
+        quant = dtype == "int8"
+        idx = DenseIndex.build(Dh, quantize_int8=quant)
+        tb = _bench(lambda q: idx.search_projected(q, W, k=K, mean=mean),
+                    jnp.asarray(Qs[:SERVE_BATCH])) / 1e6
+        rate = 0.8 * SERVE_BATCH / tb
+        rows = {}
+        for layout in ("segmented", "paged"):
+            for name, arate in (("append_0", 0.0),
+                                ("append_high",
+                                 LIVE_APPEND_RATES["append_high"])):
+                if layout == "segmented":
+                    live = SegmentedIndex.from_index(
+                        idx, delta_capacity=LIVE_DELTA_CAP)
+                else:
+                    live = PagedIndex.from_index(
+                        idx, page_rows=PAGED_PAGE_ROWS,
+                        seal_rows=LIVE_DELTA_CAP)
+                srv = RetrievalServer(live, pruner, k=K,
+                                      max_batch=SERVE_BATCH,
+                                      pipeline_depth=SERVE_DEPTH)
+                up = IndexUpdater(pruner=pruner, index=live, server=srv,
+                                  delta_capacity=LIVE_DELTA_CAP)
+                # same warmup contract as live_index: open + non-widening
+                # extend + query compile every steady-state path up front
+                warm = rng.standard_normal(
+                    (LIVE_APPEND_BLOCK, d_raw)).astype(np.float32)
+                up.add_documents(jnp.asarray(warm))
+                up.add_documents(jnp.asarray(0.5 * warm))
+                srv.query(Qs[0])
+                jit0 = segment_jit_cache_size()
+                n0 = up.index.n
+                stop = threading.Event()
+
+                def appender(arate=arate):
+                    while not stop.is_set():
+                        t0 = time.perf_counter()
+                        up.add_documents(jnp.asarray(
+                            rng.standard_normal((LIVE_APPEND_BLOCK, d_raw))
+                            .astype(np.float32)))
+                        lag = (LIVE_APPEND_BLOCK / arate
+                               - (time.perf_counter() - t0))
+                        if lag > 0:
+                            stop.wait(lag)
+
+                th = None
+                if arate > 0:
+                    th = threading.Thread(target=appender, daemon=True)
+                    th.start()
+                res = _drive_open(srv, Qs, rate=rate)
+                if th is not None:
+                    stop.set()
+                    th.join(timeout=30.0)
+                recompiles = segment_jit_cache_size() - jit0
+                rows[f"{layout}_{name}"] = dict(
+                    _serve_mode_row(res, srv.worker_stats()),
+                    appended_rows=int(up.index.n - n0),
+                    swaps=int(srv.swap_count),
+                    recompiles_steady=int(recompiles))
+                srv.close()
+        configs[f"dense_{dtype}"] = dict(
+            n=int(Dh.shape[0]), dim=int(Dh.shape[1]), rate_qps=float(rate),
+            **rows)
+        emit(f"paged_live_dense_{dtype},"
+             f"{rows['paged_append_high']['p50_ms']*1e3:.0f},"
+             f"seg0={rows['segmented_append_0']['worker_qps']:.1f}qps "
+             f"pg0={rows['paged_append_0']['worker_qps']:.1f}qps "
+             f"segH={rows['segmented_append_high']['worker_qps']:.1f}qps "
+             f"pgH={rows['paged_append_high']['worker_qps']:.1f}qps"
+             f"(+{rows['paged_append_high']['appended_rows']}r/"
+             f"{rows['paged_append_high']['swaps']}sw) "
+             f"recompiles={rows['paged_append_high']['recompiles_steady']}")
+
+    # -- DMA/compute overlap: depth sweep, resident vs oversubscribed -------
+    n_cap = min(Dh.shape[0], PALLAS_MAX_DOCS)
+    Dc = Dh[:n_cap]
+    base8 = DenseIndex.build(Dc, quantize_int8=True)
+    npages = -(-n_cap // PAGED_PAGE_ROWS)
+    pool = max(npages // 2, 1)
+    Qb = jnp.asarray(Qs[:SERVE_BATCH])
+    depth_rows = {}
+    for depth in PAGED_DEPTHS:
+        row = {}
+        outs = {}
+        for mode, pp in (("resident", None), ("oversubscribed", pool)):
+            pg = PagedIndex.from_index(base8, page_rows=PAGED_PAGE_ROWS,
+                                       pool_pages=pp, backend="pallas",
+                                       depth=depth)
+            us = _bench(
+                lambda q: pg.search_projected(q, W, k=K, mean=mean), Qb)
+            outs[mode] = pg.search_projected(Qb, W, k=K, mean=mean)
+            row[mode] = dict(us=us, qps=SERVE_BATCH / (us / 1e6),
+                             host_pages=int(pg.storage.n_host_pages))
+        row["match"] = bool(
+            (np.asarray(outs["resident"][0])
+             == np.asarray(outs["oversubscribed"][0])).all()
+            and (np.asarray(outs["resident"][1])
+                 == np.asarray(outs["oversubscribed"][1])).all())
+        row["overlap_ratio"] = (row["oversubscribed"]["qps"]
+                                / row["resident"]["qps"])
+        depth_rows[f"depth_{depth}"] = row
+        emit(f"paged_depth_{depth},{row['resident']['us']:.0f},"
+             f"resident={row['resident']['qps']:.1f}qps "
+             f"oversub={row['oversubscribed']['qps']:.1f}qps "
+             f"({row['overlap_ratio']:.2f}x, "
+             f"{row['oversubscribed']['host_pages']} host pages) "
+             f"match={row['match']}")
+    best_depth, best_ratio = max(
+        ((d, depth_rows[f"depth_{d}"]["overlap_ratio"])
+         for d in PAGED_DEPTHS if d >= 2), key=lambda t: t[1])
+    oversub = dict(
+        n=int(n_cap), page_rows=int(PAGED_PAGE_ROWS),
+        total_pages=int(npages), pool_pages=int(pool),
+        host_pages=int(npages - pool), depth=int(best_depth),
+        resident_qps=depth_rows[f"depth_{best_depth}"]["resident"]["qps"],
+        oversub_qps=depth_rows[f"depth_{best_depth}"]["oversubscribed"]["qps"],
+        ratio=float(best_ratio))
+    emit(f"paged_oversubscription,{oversub['resident_qps']:.0f},"
+         f"ratio={oversub['ratio']:.2f} at depth={best_depth} "
+         f"({oversub['host_pages']}/{npages} pages on host)")
+
+    # -- page-count sweep: full lifecycle, zero steady-state recompiles -----
+    # deliberately oversubscribed (pool of 18 against a growing index) so
+    # the measured sweep crosses NOTHING for the first time: warmup runs
+    # the lifecycle until the jit-variant set is a fixed point with the
+    # host tier already live, then five more lifecycles grow the page
+    # count (and the host tier) with the cache pinned
+    rngp = np.random.default_rng(23)
+    m = int(Dh.shape[1])
+    pg = PagedIndex.from_index(
+        DenseIndex.build(Dh[:1024], quantize_int8=True),
+        page_rows=PAGED_SWEEP_PAGE_ROWS, pool_pages=18,
+        seal_rows=PAGED_SWEEP_SEAL_ROWS, wave_pages=2)
+
+    def lifecycle(pg, rows):
+        pg = pg.append(jnp.asarray(
+            rngp.standard_normal((rows, m)).astype(np.float32)))
+        pg.search_projected(Qb, W, k=K, mean=mean)
+        pg, _ = pg.promote()
+        pg, _ = pg.compact_pages()
+        jax.block_until_ready(pg.search_projected(Qb, W, k=K, mean=mean))
+        return pg
+
+    warmups, prev = 0, -1
+    while warmups < 10:
+        pg = lifecycle(pg, 192)
+        warmups += 1
+        cur = segment_jit_cache_size()
+        if cur == prev and pg.storage.n_host_pages > 0:
+            break
+        prev = cur
+    jit0 = segment_jit_cache_size()
+    page_counts = [int(pg.total_pages)]
+    host_counts = [int(pg.storage.n_host_pages)]
+    for rows in PAGED_SWEEP_ROWS:
+        pg = lifecycle(pg, rows)
+        page_counts.append(int(pg.total_pages))
+        host_counts.append(int(pg.storage.n_host_pages))
+    sweep = dict(page_rows=int(PAGED_SWEEP_PAGE_ROWS),
+                 seal_rows=int(PAGED_SWEEP_SEAL_ROWS),
+                 pool_pages=18, warmup_lifecycles=int(warmups),
+                 append_rows=[int(r) for r in PAGED_SWEEP_ROWS],
+                 page_counts=page_counts, host_pages=host_counts,
+                 recompiles_steady=int(segment_jit_cache_size() - jit0))
+    emit(f"paged_page_count_sweep,0,pages={page_counts} "
+         f"host={host_counts} recompiles={sweep['recompiles_steady']}")
+
+    # -- guard A/B: per-row masked merge vs legacy whole-batch guard --------
+    qh = pruner.transform_queries(jnp.asarray(Q))
+    blk = min(512, Dh.shape[0])
+    t_row = _bench(lambda q: _scan_topk(Dh, q, K, block=blk), qh)
+    t_batch = _bench(
+        lambda q: _scan_topk(Dh, q, K, block=blk, guard="batch"), qh)
+    out_r = _scan_topk(Dh, qh, K, block=blk)
+    out_b = _scan_topk(Dh, qh, K, block=blk, guard="batch")
+    identical = bool(
+        (np.asarray(out_r[0]) == np.asarray(out_b[0])).all()
+        and (np.asarray(out_r[1]) == np.asarray(out_b[1])).all())
+    guard_ab = dict(row_us=t_row, batch_us=t_batch,
+                    speedup=t_batch / t_row, block=int(blk),
+                    bitwise_identical=identical)
+    emit(f"paged_guard_ab,{t_row:.0f},row-vs-batch={t_batch/t_row:.2f}x "
+         f"identical={identical}")
+
+    return dict(meta=dict(page_rows=int(PAGED_PAGE_ROWS),
+                          depths=[int(d) for d in PAGED_DEPTHS],
+                          n_queries=int(N_LIVE),
+                          append_block=int(LIVE_APPEND_BLOCK),
+                          seal_rows=int(LIVE_DELTA_CAP),
+                          rate_policy="0.8x fused batched capacity",
+                          depth_backend="pallas (interpret off-TPU)"),
+                configs=configs, depth_sweep=depth_rows,
+                oversubscription=oversub, page_count_sweep=sweep,
+                guard_ab=guard_ab)
+
+
 def _serve_bucketing(Dh, pruner, Q_raw, emit) -> dict:
     """Pad-to-max vs batch-shape bucketing at LOW load (0.2x capacity):
     partial batches dominate there, so padding every one of them to
@@ -766,6 +1015,11 @@ def run(emit=print) -> dict:
     results["live_index"] = _live_index(Dh, pruner, np.asarray(Q), emit)
     results["serve_bucketing"] = _serve_bucketing(Dh, pruner, np.asarray(Q),
                                                   emit)
+
+    # paged index memory: paged-vs-segmented live serve, DMA depth sweep
+    # with the oversubscription headline row, zero-recompile page-count
+    # lifecycle, and the per-row vs whole-batch guard A/B
+    results["paged"] = _paged(Dh, pruner, np.asarray(Q), emit)
 
     # cascade Pareto: two-stage coarse scan -> exact shortlist rescore vs
     # the single-resolution full-m worker, same open-loop harness

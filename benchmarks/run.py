@@ -39,6 +39,16 @@ _CASCADE_ROW_KEYS = ("recall_at_10", "worker_qps", "recompiles_steady")
 _FLEET_ROWS = ("healthy", "kill_restart", "bad_rollout")
 _FLEET_ROW_KEYS = ("n", "n_ok", "p50_ms", "p99_ms", "lost_accepted",
                    "misrouted", "health_ok")
+# paged rows per config: both layouts at both append rates, every row with
+# full serve telemetry and a ZERO steady-state recompile count (paged
+# appends are page-pointer swaps at fixed dispatch shapes); the depth sweep
+# must cover {1,2,4} with a residency bit-identity check per depth, and
+# the oversubscription headline row must hold >=80% of the fully-resident
+# qps at pipeline depth >=2
+_PAGED_ROWS = ("segmented_append_0", "segmented_append_high",
+               "paged_append_0", "paged_append_high")
+_PAGED_DEPTHS = ("depth_1", "depth_2", "depth_4")
+_PAGED_OVERSUB_FLOOR = 0.80
 
 
 def check_perf_schema(results: dict) -> None:
@@ -105,6 +115,74 @@ def check_perf_schema(results: dict) -> None:
                 f"cascade.{name}: {row['recompiles_steady']} steady-state "
                 f"recompiles — with nk fixed, every cascade dispatch must "
                 f"reuse its compiled shape")
+    pg = results.get("paged")
+    if not isinstance(pg, dict) or not isinstance(pg.get("configs"), dict) \
+            or not pg["configs"]:
+        raise SystemExit("BENCH_perf.json schema: missing or empty "
+                         "'paged.configs' section")
+    for name, cfg in pg["configs"].items():
+        for rowname in _PAGED_ROWS:
+            if rowname not in cfg:
+                raise SystemExit(f"paged.{name}: missing '{rowname}' row")
+            row = cfg[rowname]
+            missing = [k for k in _SERVE_MODE_KEYS + _LIVE_APPEND_KEYS
+                       if k not in row]
+            if missing:
+                raise SystemExit(f"paged.{name}.{rowname}: missing keys "
+                                 f"{missing}")
+            if row["recompiles_steady"] != 0:
+                raise SystemExit(
+                    f"paged.{name}.{rowname}: "
+                    f"{row['recompiles_steady']} steady-state recompiles — "
+                    f"page-pointer appends must never stall serving on a "
+                    f"jit compile (paged fixed-shape dispatch contract)")
+    ds = pg.get("depth_sweep")
+    if not isinstance(ds, dict):
+        raise SystemExit("paged: missing 'depth_sweep' section")
+    for dname in _PAGED_DEPTHS:
+        drow = ds.get(dname)
+        if not isinstance(drow, dict) or "resident" not in drow \
+                or "oversubscribed" not in drow:
+            raise SystemExit(f"paged.depth_sweep.{dname}: missing "
+                             f"resident/oversubscribed rows")
+        if not drow.get("match"):
+            raise SystemExit(
+                f"paged.depth_sweep.{dname}: oversubscribed results "
+                f"diverged from fully resident (match=False) — host-tier "
+                f"streaming must change throughput, never results")
+        if drow["oversubscribed"]["host_pages"] == 0:
+            raise SystemExit(f"paged.depth_sweep.{dname}: oversubscribed "
+                             f"row has no host-tier pages — the pool cap "
+                             f"did not oversubscribe")
+    ov = pg.get("oversubscription")
+    if not isinstance(ov, dict) or "ratio" not in ov:
+        raise SystemExit("paged: missing 'oversubscription' row")
+    if ov.get("depth", 0) < 2:
+        raise SystemExit("paged.oversubscription: headline row must come "
+                         "from pipeline depth >= 2")
+    if ov["ratio"] < _PAGED_OVERSUB_FLOOR:
+        raise SystemExit(
+            f"paged.oversubscription: {ov['ratio']:.2f} of fully-resident "
+            f"qps with {ov.get('host_pages')} host pages — below the "
+            f"{_PAGED_OVERSUB_FLOOR:.2f} floor; host-tier staging is not "
+            f"hiding behind compute at depth {ov.get('depth')}")
+    sw = pg.get("page_count_sweep")
+    if not isinstance(sw, dict) or "recompiles_steady" not in sw:
+        raise SystemExit("paged: missing 'page_count_sweep' section")
+    if len(set(sw.get("page_counts", []))) < 2:
+        raise SystemExit("paged.page_count_sweep: page count never "
+                         "changed — the sweep is not sweeping")
+    if sw["recompiles_steady"] != 0:
+        raise SystemExit(
+            f"paged.page_count_sweep: {sw['recompiles_steady']} "
+            f"steady-state recompiles across page counts "
+            f"{sw.get('page_counts')} — [lo,hi) is traced, page count is "
+            f"data; growth must never leak into a static jit key")
+    ga = pg.get("guard_ab")
+    if not isinstance(ga, dict) or not ga.get("bitwise_identical"):
+        raise SystemExit("paged.guard_ab: per-row guard results are not "
+                         "bit-identical to the whole-batch guard — the "
+                         "guard is an optimisation, never a result change")
     fl = results.get("fleet")
     if not isinstance(fl, dict):
         raise SystemExit("BENCH_perf.json schema: missing 'fleet' section")

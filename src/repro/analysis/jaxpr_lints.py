@@ -340,6 +340,45 @@ def serving_entry_points() -> tuple[EntryPoint, ...]:
         args=(Q,), expected_dispatches=nd + 3, corpus_shape=(n, m),
         family="segmented", backend="jnp", batch=B))
 
+    # -- paged: a device-resident paged index is ONE fused dispatch — the
+    # projection, page-table walk, per-page in-register dequant and top-k
+    # all trace into ``_paged_search_projected``. Appends land in the tail
+    # tier at contiguous logical slots, so a grown index stays single-run
+    # (the [lo, hi) bounds are traced operands, never static shapes) ------
+    from repro.core.paged import PagedIndex
+    rng_p = np.random.default_rng(11)
+    for quant, backend in ((False, "jnp"), (True, "jnp"), (True, "pallas")):
+        pidx = PagedIndex.from_index(
+            DenseIndex.build(Dh, quantize_int8=quant), page_rows=64,
+            seal_rows=128, backend=backend)
+        pidx = pidx.append(rng_p.standard_normal((70, m))
+                           .astype(np.float32))
+        label = f"PagedIndex.search_projected[{backend}" \
+                f"{',int8' if quant else ''}]"
+        entries.append(EntryPoint(
+            label=label,
+            fn=(lambda i: lambda q: i.search_projected(q, W, k=10,
+                                                       mean=mean))(pidx),
+            args=(Q,), expected_dispatches=1, corpus_shape=(n, m),
+            family="paged", backend=backend,
+            storage_dtype="int8" if quant else None,
+            strip_rows=64 if quant else None, batch=B))
+
+    # -- paged cascade: projection + paged coarse walk + shortlist +
+    # paged rescore + select = 5 dispatches, independent of page or
+    # extent count (the segmented cascade pays 2 more per delta) -----------
+    rng_pc = np.random.default_rng(13)
+    pcas = CascadeIndex.build(Dh, m_coarse=max(2, m // 2), n_factor=2,
+                              quantize_int8=True
+                              ).paged(page_rows=64, seal_rows=128)
+    pcas = pcas.append(rng_pc.standard_normal((70, m)).astype(np.float32))
+    entries.append(EntryPoint(
+        label="CascadeIndex.search_projected[paged,int8]",
+        fn=(lambda c: lambda q: c.search_projected(q, W, k=10,
+                                                   mean=mean))(pcas),
+        args=(Q,), expected_dispatches=5, corpus_shape=(n, m),
+        family="cascade-paged", backend="jnp", batch=B))
+
     # -- segmented cascade: projection + per-segment coarse scans + coarse
     # merge + shortlist + per-segment rescores + select = 2*nd + 6 ---------
     rng_c = np.random.default_rng(7)
@@ -437,4 +476,30 @@ def run() -> list[Finding]:
     findings += check_recompile_stability(
         cdispatch, segment_jit_cache_sizes, sweep,
         "CascadeIndex.append+search_projected")
+
+    # -- paged lifecycle recompile stability: the FULL page lifecycle —
+    # append -> search -> promote -> compact -> search — at varying live
+    # counts must reuse every jit. All page metadata (table, nvalid,
+    # offsets, scales) is host-authoritative and re-pushed at fixed
+    # shapes; [lo, hi) slot bounds are traced operands; compaction is the
+    # one fused ``_pool_drain`` gather. Any cache growth here means a page
+    # count or extent boundary leaked into a static key.
+    from repro.core.paged import PagedIndex
+    rng_p = np.random.default_rng(11)
+    pstate = {"pg": PagedIndex.from_index(
+        DenseIndex.build(Dh, quantize_int8=True), page_rows=64,
+        seal_rows=128)}
+
+    def pdispatch(live_rows: int, _offset: int) -> None:
+        pg = pstate["pg"].append(
+            rng_p.standard_normal((live_rows, m)).astype(np.float32))
+        pg.search_projected(Q, W, k=5, mean=mean)
+        pg, _ = pg.promote()
+        pg, _ = pg.compact_pages()
+        pg.search_projected(Q, W, k=5, mean=mean)
+        pstate["pg"] = pg
+
+    findings += check_recompile_stability(
+        pdispatch, segment_jit_cache_sizes, sweep,
+        "PagedIndex.lifecycle")
     return findings

@@ -33,7 +33,8 @@ import numpy as np
 from repro.analysis import Finding
 from repro.analysis.jaxpr_lints import iter_all_eqns
 from repro.kernels.pca_project import project_geometry
-from repro.kernels.topk_score import TopKGeometry, topk_geometry
+from repro.kernels.topk_score import (PagedTopKGeometry, TopKGeometry,
+                                      paged_topk_geometry, topk_geometry)
 
 #: per-core VMEM on current TPU generations; the checker budget defaults to
 #: this minus a safety margin for compiler-managed temporaries.
@@ -81,6 +82,124 @@ def estimate_topk_vmem(g: TopKGeometry, dtype: str,
                  cand=cand, scratch=scratch, outputs=outs)
     parts["total"] = sum(parts.values())
     return parts
+
+
+def estimate_paged_topk_vmem(g: PagedTopKGeometry, dtype: str,
+                             with_scale: bool = False,
+                             with_ids: bool = False,
+                             with_carry: bool = False) -> dict[str, int]:
+    """Resident-bytes breakdown of one ``topk_score_paged_pallas`` dispatch.
+
+    The page pool and tail live in HBM (``ANY`` memory space) — only the
+    DMA landing window is VMEM-resident, and it is priced ``depth`` times:
+    at pipeline depth D, D page buffers (plus their per-page scale and id
+    strips in the rescore mode) are in flight at once. That is the whole
+    point of the estimate — doubling ``depth`` buys copy/compute overlap
+    by doubling exactly these rows. Everything else mirrors the flat
+    kernel: the f32 query tile streams per batch tile, the running top-k
+    scratch persists, and the per-page score/fold/candidate intermediates
+    are priced once (the loop reuses them each page).
+    """
+    w = _width(dtype)
+    R = g.page_rows
+    parts = dict(
+        q_tile=2 * g.block_b * g.m * 4,               # f32 query tile
+        page_window=g.depth * R * g.m * w,            # DMA buffers x depth
+        scale_window=g.depth * g.m * 4 if with_scale else 0,
+        ids_window=g.depth * R * 4 if with_ids else 0,
+        dequant=R * g.m * 4 if w < 4 else 0,          # in-register upcast
+        scores=g.block_b * R * 4,                     # per-page strip
+        gids=g.block_b * R * 4,
+        fold=g.block_b * g.fold_r * g.fold_w * (4 + 4),
+        cand=g.block_b * (g.k + g.fold_w) * (4 + 4),
+        scratch=g.block_b * g.k * (4 + 4),            # running top-k
+        carry=2 * g.block_b * g.k * (4 + 4) if with_carry else 0,
+        outputs=2 * g.block_b * g.k * (4 + 4),
+    )
+    parts["total"] = sum(parts.values())
+    return parts
+
+
+def estimate_paged_hbm_reads(g: PagedTopKGeometry, dtype: str,
+                             live_pages: int, with_scale: bool = False,
+                             with_ids: bool = False) -> dict[str, int]:
+    """HBM read-bytes of one paged dispatch: every live page is DMA'd once
+    per batch tile, the int32 page table / n_valid / offset arrays ride
+    along (they are small but they are real reads the flat kernel does
+    not pay), and the query tiles stream once."""
+    w = _width(dtype)
+    R = g.page_rows
+    parts = dict(
+        pages=g.nbt * live_pages * R * g.m * w,
+        page_table=3 * g.table_cap * 4 + 8,           # pt/nvalid/offset+lohi
+        scales=g.nbt * live_pages * g.m * 4 if with_scale else 0,
+        ids=g.nbt * live_pages * R * 4 if with_ids else 0,
+        queries=g.b_pad * g.m * 4,
+    )
+    parts["total"] = sum(parts.values())
+    return parts
+
+
+def check_paged_topk_config(table_cap: int, pool_pages: int, page_rows: int,
+                            m: int, B: int, k: int, *, depth: int = 2,
+                            block_b: int = 128, dtype: str = "float32",
+                            with_scale: bool = False, with_ids: bool = False,
+                            budget: int = DEFAULT_BUDGET) -> list[Finding]:
+    """Budget + tiling-invariant findings for one paged-scan config."""
+    g = paged_topk_geometry(table_cap, pool_pages, page_rows, m, B, k,
+                            depth=depth, block_b=block_b)
+    label = (f"topk_score_paged[R={page_rows},m={m},k={k},d={depth},"
+             f"bb={g.block_b},{dtype}"
+             f"{',scale' if with_scale else ''}{',ids' if with_ids else ''}]")
+    findings: list[Finding] = []
+
+    est = estimate_paged_topk_vmem(g, dtype, with_scale=with_scale,
+                                   with_ids=with_ids)
+    if est["total"] > budget:
+        top = sorted((v, c) for c, v in est.items() if c != "total")[-2:]
+        hot = ", ".join(f"{c}={v // 1024}KiB" for v, c in reversed(top))
+        findings.append(Finding(
+            check="pallas.vmem-budget", where=label,
+            message=(f"{label}: resident VMEM estimate "
+                     f"{est['total'] / 2 ** 20:.1f} MiB exceeds the "
+                     f"{budget / 2 ** 20:.1f} MiB budget ({hot}) — shrink "
+                     f"page_rows or the pipeline depth")))
+
+    bad = []
+    if g.nbt * g.block_b != g.b_pad or g.b_pad < g.B:
+        bad.append(f"batch tiles: {g.nbt}x{g.block_b} vs B={g.B}"
+                   f" pad->{g.b_pad}")
+    if g.fold_r * g.fold_w != g.page_rows + g.pad_w or g.pad_w >= g.fold_w:
+        bad.append(f"fold: {g.fold_r}x{g.fold_w} vs page_rows="
+                   f"{g.page_rows}+pad{g.pad_w}")
+    if depth < 1:
+        bad.append(f"depth: {depth} < 1 — no DMA buffer in flight")
+    for b in bad:
+        findings.append(Finding(
+            check="pallas.grid", where=f"{label}:{b.split(':')[0]}",
+            message=(f"{label}: tiling invariant violated — {b}; rows "
+                     f"would be dropped or double-visited")))
+
+    if table_cap < pool_pages:
+        findings.append(Finding(
+            check="pallas.grid", where=f"{label}:table",
+            message=(f"{label}: table_cap={table_cap} < pool_pages="
+                     f"{pool_pages} — pool slots exist that no page-table "
+                     f"entry can ever address")))
+    if g.fold_w % LANE:
+        findings.append(Finding(
+            check="pallas.alignment", where=f"{label}:fold_w",
+            severity="warn",
+            message=(f"{label}: fold_w={g.fold_w} is not lane-aligned "
+                     f"({LANE}); cross-lane reductions pad internally")))
+    if page_rows % SUBLANE:
+        findings.append(Finding(
+            check="pallas.alignment", where=f"{label}:page_rows",
+            severity="warn",
+            message=(f"{label}: page_rows={page_rows} is not "
+                     f"sublane-aligned ({SUBLANE}); every page DMA pads "
+                     f"internally")))
+    return findings
 
 
 def estimate_project_vmem(n: int, d: int, m: int, *, block_rows: int,
@@ -283,6 +402,21 @@ CASCADE_COARSE_CONFIGS = (
     (1_000_000, 64, 32, 160, 1024, 32, "int8"),
     (1_000_000, 32, 32, 80, 1024, 32, "int8"),
 )
+#: paged streaming geometries — the bench's paged serve rows plus the
+#: oversubscription and rescore shapes. Layout: (table_cap, pool_pages,
+#: page_rows, m, B, k, depth, block_b, dtype, with_scale, with_ids).
+#: depth counts DMA page buffers in flight, so the f32 depth-4 row prices
+#: the deepest overlap the bench sweeps; the pool_pages<live row is the
+#: oversubscribed config (same kernel, tail/host pages DMA through the
+#: identical buffer window).
+PAGED_TOPK_CONFIGS = (
+    (8192, 8192, 512, 128, 128, 10, 2, 128, "int8", True, False),
+    (8192, 8192, 512, 128, 128, 10, 2, 128, "float32", False, False),
+    (8192, 8192, 512, 128, 128, 10, 4, 128, "float32", False, False),
+    (4096, 1024, 1024, 256, 64, 100, 2, 64, "int8", True, False),
+    (4096, 4096, 512, 384, 32, 10, 2, 32, "int8", True, True),
+)
+
 CASCADE_RESCORE_CONFIGS = (
     # U = B*N*k rows at full m, final k — the BENCH_perf cascade grid
     (1_280, 384, 32, 10, 1024, 32, "float32"),    # N=4
@@ -310,6 +444,11 @@ def run(budget: int = DEFAULT_BUDGET) -> list[Finding]:
     for n, m, B, k, bn, bb, dt in CASCADE_RESCORE_CONFIGS:
         findings += check_topk_config(n, m, B, k, block_n=bn, block_b=bb,
                                       dtype=dt, with_ids=True, budget=budget)
+    for tc, pp, R, m, B, k, dep, bb, dt, sc, ids in PAGED_TOPK_CONFIGS:
+        findings += check_paged_topk_config(tc, pp, R, m, B, k, depth=dep,
+                                            block_b=bb, dtype=dt,
+                                            with_scale=sc, with_ids=ids,
+                                            budget=budget)
     for n, d, m, rows, quant in SERVING_PROJECT_CONFIGS:
         findings += check_project_config(n, d, m, block_rows=rows,
                                          quant=quant, budget=budget)
@@ -331,6 +470,21 @@ def run(budget: int = DEFAULT_BUDGET) -> list[Finding]:
         functools.partial(topk_score_pallas, k=10, block_n=128, block_b=8,
                           row_ids=ids),
         (D, Q))
+    # paged mode: the query/carry tiles are the only windowed operands
+    # (tables ride SMEM, pools ride ANY) — their windows must stay inside
+    # the padded batch, including the partial last page (nvalid < R)
+    from repro.kernels.topk_score import topk_score_paged_pallas
+    R, npg, mD = 64, 4, 32
+    pool = rng.standard_normal((npg, R, mD)).astype(np.float32)
+    nv = np.full(npg, R, np.int32)
+    nv[-1] = 40
+    findings += check_traced_index_maps(
+        "topk_score_paged_pallas[4x64p]",
+        functools.partial(topk_score_paged_pallas, k=10, depth=2,
+                          block_b=8),
+        (pool, np.arange(npg, dtype=np.int32), nv,
+         np.arange(npg, dtype=np.int32) * R, np.int32(0), np.int32(npg),
+         rng.standard_normal((4, mD)).astype(np.float32)))
     X = rng.standard_normal((600, 64)).astype(np.float32)
     W = rng.standard_normal((64, 32)).astype(np.float32)
     findings += check_traced_index_maps(

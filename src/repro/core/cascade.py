@@ -213,6 +213,8 @@ class CascadeIndex:
     @classmethod
     def load(cls, store, *, m_coarse: int | None = None, n_factor: int = 8,
              backend: Backend = "jnp", segmented: bool = False,
+             paged: bool = False, page_rows: int | None = None,
+             pool_pages: int | None = None,
              delta_capacity: int = 4096) -> "CascadeIndex":
         """Load a multi-resolution artifact: the main segments become the
         full resolution, the ``m_coarse`` resolution entry the coarse one
@@ -231,6 +233,20 @@ class CascadeIndex:
         from repro.core.store import IndexStore, IndexStoreError
         if isinstance(store, (str, os.PathLike)):
             store = IndexStore.open(store)
+        if paged:
+            # the segmented load path rehydrates both resolutions
+            # byte-for-byte; the page tables then adopt those bytes —
+            # the paged block (when present) supplies the geometry
+            pb = store.manifest.get("paged") or {}
+            inner = cls.load(store, m_coarse=m_coarse, n_factor=n_factor,
+                             backend=backend, segmented=True,
+                             delta_capacity=int(pb.get("seal_rows",
+                                                       delta_capacity)))
+            return inner.paged(
+                page_rows=int(pb.get("page_rows", 256))
+                if page_rows is None else page_rows,
+                pool_pages=pool_pages,
+                seal_rows=int(pb.get("seal_rows", delta_capacity)))
         views = store.resolutions()
         if not views:
             raise IndexStoreError(
@@ -281,6 +297,30 @@ class CascadeIndex:
             full=SegmentedIndex.from_index(self.full,
                                            delta_capacity=delta_capacity))
 
+    def paged(self, *, page_rows: int = 256, pool_pages: int | None = None,
+              coarse_pool_pages: int | None = None, seal_rows: int = 4096,
+              depth: int = 2, wave_pages: int = 8) -> "CascadeIndex":
+        """Re-home both resolutions on paged storage (byte-for-byte): the
+        coarse scan and the exact rescore then both stream through the
+        page tables — appends, promotion, compaction and eviction become
+        pointer swaps on BOTH sides of the cascade, and either side may
+        oversubscribe device memory independently (``pool_pages`` /
+        ``coarse_pool_pages``)."""
+        from repro.core.paged import PagedIndex
+
+        def conv(ix, pool):
+            if isinstance(ix, SegmentedIndex):
+                return PagedIndex.from_segmented(
+                    ix, page_rows=page_rows, pool_pages=pool, depth=depth,
+                    wave_pages=wave_pages)
+            return PagedIndex.from_index(
+                ix, page_rows=page_rows, pool_pages=pool,
+                seal_rows=seal_rows, depth=depth, wave_pages=wave_pages)
+
+        return dataclasses.replace(self, full=conv(self.full, pool_pages),
+                                   coarse=conv(self.coarse,
+                                               coarse_pool_pages))
+
     # -- shape --------------------------------------------------------------
     @property
     def n(self) -> int:
@@ -303,9 +343,11 @@ class CascadeIndex:
     def append(self, rows) -> "CascadeIndex":
         """Append pruned f32 rows (full m) to BOTH resolutions — the coarse
         side takes the leading columns. Requires segmented resolutions."""
-        if not isinstance(self.full, SegmentedIndex):
-            raise TypeError("append needs segmented resolutions — wrap "
-                            "with CascadeIndex.segmented() first")
+        if not (isinstance(self.full, SegmentedIndex)
+                or hasattr(self.full, "storage")):
+            raise TypeError("append needs segmented or paged resolutions — "
+                            "wrap with CascadeIndex.segmented()/.paged() "
+                            "first")
         rows = np.atleast_2d(np.asarray(rows, np.float32))
         return dataclasses.replace(
             self, full=self.full.append(rows),
@@ -323,21 +365,30 @@ class CascadeIndex:
         nk = min(self.n_factor * k, max(self.n, 1))
         Q = jnp.atleast_2d(queries)
         W = jnp.asarray(components)
-        if isinstance(self.full, SegmentedIndex):
+        if isinstance(self.full, SegmentedIndex) or hasattr(self.full,
+                                                            "storage"):
             return self._segmented_search(Q, W, mean, k, nk)
         return _cascade_dense_projected(
             self.coarse.vectors, self.coarse.scale, self.full.vectors,
             self.full.scale, W, mean, Q, k, nk, block, self.full.backend)
 
     def _segmented_search(self, Q, W, mean, k: int, nk: int):
-        """Segmented cascade: shared projection, per-segment coarse scan
-        (the existing merged top-k), then a per-segment rescore of the
-        shared shortlist combined by max — every per-segment dispatch
-        takes live count/offset as traced operands (zero recompiles)."""
+        """Segmented/paged cascade: shared projection, coarse scan over
+        live segments or the coarse page table, then an exact rescore of
+        the shared shortlist — per-segment dispatches combined by max, or
+        the paged page-table walk (``PagedIndex.rescore``, bitwise the
+        same parts-combine). Live counts/offsets (or page-table slot
+        bounds) are traced operands throughout — zero recompiles."""
         qf = _project_nofold(Q, W, mean)
         qc = qf[:, :self.m_coarse]
-        _, cids = self.coarse._merged_topk(qc, nk)
+        if hasattr(self.coarse, "storage"):       # paged coarse scan
+            _, cids = self.coarse._search_qf(qc, nk)
+        else:
+            _, cids = self.coarse._merged_topk(qc, nk)
         uids = _cascade_shortlist(cids)
+        if hasattr(self.full, "storage"):         # paged exact rescore
+            acc = self.full.rescore(qf, uids)
+            return _cascade_select((acc,), uids, k)
         base = self.full.base
         if not isinstance(base, DenseIndex):
             raise TypeError("segmented cascade rescore supports a dense "

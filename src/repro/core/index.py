@@ -119,9 +119,9 @@ def _staged_topk_merge(s: jax.Array, ids: jax.Array, k: int,
     return s, ids
 
 
-@partial(jax.jit, static_argnames=("k", "block", "vma_axes"))
+@partial(jax.jit, static_argnames=("k", "block", "vma_axes", "guard"))
 def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
-               vma_axes: tuple[str, ...] | None = None
+               vma_axes: tuple[str, ...] | None = None, guard: str = "row"
                ) -> tuple[jax.Array, jax.Array]:
     """Blocked exact search: stream row blocks of D, keep a running top-k.
 
@@ -135,11 +135,16 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
       * two-stage select: ``top_k`` over the (B, block) strip alone, then a
         tiny (B, 2k) merge with the running list — never a sort over the
         (B, k + block) concat;
-      * block-skip guard: a strip whose max cannot beat the current k-th
-        best (across the whole batch) skips selection entirely under
-        ``lax.cond``. Skipping on equality is exact — strips are visited
-        in ascending id order, so later ties lose the first-occurrence
-        tie-break anyway.
+      * block-skip guard: a strip that cannot improve the running top-k
+        skips selection entirely under ``lax.cond``. ``guard="row"``
+        (default): row b improves iff ``max(s[b]) > min(run_s[b])``; the
+        strip is skipped iff *no* row improves (a strictly weaker skip
+        condition than the legacy ``guard="batch"`` global compare, so
+        mixed batches skip more often, never less) and the merge writes
+        back only improving rows. Results are bit-identical either way:
+        for a non-improving row the merge is already a no-op — strict
+        guard, and ascending-id strips lose first-occurrence ties.
+        Skipping on equality is exact for the same ascending-id reason.
 
     ``vma_axes``: when called inside shard_map over those axes, the scan
     carry must be marked varying (compat.mark_varying) to typecheck on
@@ -178,6 +183,8 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
         ids = start + jnp.arange(block, dtype=jnp.int32)[None, :]
         s = jnp.where(ids < n, s, -jnp.inf)
 
+        imp = jnp.max(s, axis=1) > jnp.min(bs, axis=1)           # (B,)
+
         def merge(carry_in):
             bs0, bi0 = carry_in
             ss, si = jax.lax.top_k(s, kk)                        # (B, kk)
@@ -186,9 +193,17 @@ def _scan_topk(D: jax.Array, Q: jax.Array, k: int, block: int = 65536,
             # first-occurrence tie-break, matching the kernel's pads
             cs = jnp.concatenate([bs0, ss], axis=1)              # (B, k+kk)
             ci = jnp.concatenate([bi0, gi], axis=1)
-            return _topk_merge(cs, ci, k)
+            ms, mi = _topk_merge(cs, ci, k)
+            if guard == "row":
+                # masked merge: non-improving rows keep their list bitwise
+                ms = jnp.where(imp[:, None], ms, bs0)
+                mi = jnp.where(imp[:, None], mi, bi0)
+            return ms, mi
 
-        can_improve = jnp.max(s) > jnp.min(bs)
+        if guard == "row":
+            can_improve = jnp.any(imp)
+        else:
+            can_improve = jnp.max(s) > jnp.min(bs)
         return jax.lax.cond(can_improve, merge, lambda c: c, (bs, bi)), None
 
     init = (jnp.full((B, k), -jnp.inf, jnp.float32), jnp.full((B, k), -1, jnp.int32))
@@ -603,11 +618,12 @@ def segment_jit_cache_sizes() -> dict:
     """Per-jit compiled-variant counts for every jit the segmented search
     path can touch — the diagnosable form of ``segment_jit_cache_size``
     (a failure names the function that recompiled)."""
-    from repro.core import cascade  # lazy: cascade imports this module
+    from repro.core import cascade, paged  # lazy: both import this module
     sizes = {fn.__wrapped__.__name__: fn._cache_size()
              for fn in (_delta_topk, _concat_topk, _project_nofold,
                         _scan_topk, _dense_search_projected, _delta_update)}
     sizes.update(cascade._jit_cache_sizes())
+    sizes.update(paged._jit_cache_sizes())
     return sizes
 
 

@@ -114,6 +114,11 @@ class IndexUpdater:
     # telemetry
     appended_rows: int = 0
     compactions: int = 0
+    # last compaction's cost receipt. Paged: {"pages_moved", "pages_freed",
+    # "pages_host"} — pointer swaps, the true cost unit (a rows-copied
+    # number would claim O(corpus) work the paged path never does).
+    # Segmented streaming rebuild: {"rows_rebuilt"}.
+    last_compaction: dict | None = None
     # background-thread failures (compact_async and any future maintenance
     # thread): a swallowed exception is an operational lie — the fleet
     # health check reads this list, so a dead compaction surfaces instead
@@ -135,26 +140,42 @@ class IndexUpdater:
     def build(cls, corpus: jax.Array, *, cutoff: float = 0.5,
               quantize_int8: bool = False,
               store_path: str | None = None,
-              delta_capacity: int = 4096) -> "IndexUpdater":
+              delta_capacity: int = 4096, paged: bool = False,
+              page_rows: int = 256,
+              pool_pages: int | None = None) -> "IndexUpdater":
         """Fit + build in memory; with ``store_path``, also persist the
-        artifact and attach the committed store for durable appends."""
+        artifact and attach the committed store for durable appends.
+        ``paged=True`` serves through ``PagedIndex`` (pointer-swap
+        lifecycle; ``pool_pages`` below the corpus page count
+        oversubscribes device memory)."""
+        from repro.core.paged import PagedIndex
         pruner = StaticPruner(cutoff=cutoff).fit(corpus)
         base = pruner.build_index(corpus, quantize_int8=quantize_int8)
+        if paged:
+            index = PagedIndex.from_index(base, page_rows=page_rows,
+                                          pool_pages=pool_pages,
+                                          seal_rows=delta_capacity)
+        else:
+            index = SegmentedIndex.from_index(base,
+                                              delta_capacity=delta_capacity)
         store = None
         if store_path is not None:
             from repro.core.store import save_index
-            store = save_index(store_path, base, pruner=pruner)
-        return cls(pruner=pruner,
-                   index=SegmentedIndex.from_index(
-                       base, delta_capacity=delta_capacity),
+            store = save_index(store_path, index if paged else base,
+                               pruner=pruner)
+        return cls(pruner=pruner, index=index,
                    fit_energy=captured_energy(corpus, pruner), store=store,
                    delta_capacity=delta_capacity)
 
     @classmethod
     def from_store(cls, store, *, backend: str = "jnp",
-                   mesh=None, delta_capacity: int = 4096) -> "IndexUpdater":
+                   mesh=None, delta_capacity: int = 4096,
+                   paged: bool | None = None,
+                   pool_pages: int | None = None) -> "IndexUpdater":
         """Rehydrate updater state from a committed artifact (cold start) —
-        base AND delta segments, each with its own scale.
+        base AND delta segments, each with its own scale. ``paged=None``
+        auto-detects: a store carrying the ``paged`` manifest block reloads
+        as a ``PagedIndex``.
 
         ``fit_energy`` stays lazy — the fit corpus is not in the store, and
         the eigenvalue identity gives the same reference.
@@ -162,10 +183,16 @@ class IndexUpdater:
         from repro.core.store import IndexStore
         if not isinstance(store, IndexStore):
             store = IndexStore.open(store)
-        return cls(pruner=store.load_pruner(),
-                   index=SegmentedIndex.load(store, mesh=mesh,
-                                             backend=backend,
-                                             delta_capacity=delta_capacity),
+        if paged is None:
+            paged = "paged" in store.manifest
+        if paged:
+            from repro.core.paged import PagedIndex
+            index = PagedIndex.load(store, backend=backend,
+                                    pool_pages=pool_pages)
+        else:
+            index = SegmentedIndex.load(store, mesh=mesh, backend=backend,
+                                        delta_capacity=delta_capacity)
+        return cls(pruner=store.load_pruner(), index=index,
                    store=store, delta_capacity=delta_capacity)
 
     # -- incremental growth ------------------------------------------------
@@ -195,18 +222,31 @@ class IndexUpdater:
                 self.server.swap_index(new_index)
         return int(pruned.shape[0])
 
-    def _mirror_ops(self, ops, new_index: SegmentedIndex) -> None:
+    def _mirror_ops(self, ops, new_index) -> None:
+        """Replay append ops durably. The op stream is identical for
+        segmented and paged indexes; only the delta-ordinal -> store-segment
+        mapping differs (paged: extents are segments positionally, with
+        base extents a prefix — delta ordinal di is extent/segment
+        ``n_base + di``). A paged mirror finishes with the lifecycle-block
+        swap, which may lag the segment ops across a crash (the loader
+        reconstructs; ``IndexStore._validate_paged``)."""
         if self.store is None:
             return
+        paged = hasattr(new_index, "storage")
+        if paged:
+            base_idx = sum(1 for e in new_index.storage.extents
+                           if e.kind == "base")
+            capacity = new_index.storage.seal_rows
+        else:
+            base_idx = 1
         names = [v.name for v in self.store.segments()]
         for op in ops:
             kind, di = op[0], op[1]
-            seg = new_index.deltas[di]
-            seg_idx = di + 1                       # store segment position
+            seg_idx = base_idx + di                # store segment position
             if kind == "open":
                 _, _, stored, scale = op
-                name = self.store.add_delta(scale=scale,
-                                            capacity=seg.capacity)
+                cap = capacity if paged else new_index.deltas[di].capacity
+                name = self.store.add_delta(scale=scale, capacity=cap)
                 names.append(name)
                 if stored.shape[0]:
                     self.store.append(stored, segment=name)
@@ -217,6 +257,10 @@ class IndexUpdater:
                 _, _, stored, scale = op
                 self.store.replace_segment(names[seg_idx], [stored],
                                            scale=scale)
+        if paged:
+            from repro.core.store import paged_manifest_block
+            self.store.set_paged_state(
+                paged_manifest_block(new_index.storage))
 
     # -- telemetry ---------------------------------------------------------
     @property
@@ -228,9 +272,19 @@ class IndexUpdater:
 
     @property
     def delta_fraction(self) -> float:
-        """Fraction of the corpus living outside the compacted base."""
+        """Fraction of the corpus living outside the compacted base.
+
+        Paged index: counted in PAGES (``delta_pages / total_pages``), the
+        unit compaction actually pays in — pointer swaps per page. The old
+        rows-over-corpus ratio undercounted a delta of many part-filled
+        pages (the fleet auto-compaction controller then waited too long),
+        and a capacity-based ratio would overcount sealed-but-short
+        extents that cost nothing to promote."""
         with self._lock:
             index = self.index
+        pages = getattr(index, "total_pages", None)
+        if pages is not None:
+            return index.delta_pages / pages if pages else 0.0
         n = index.n
         return index.delta_rows / n if n else 0.0
 
@@ -240,14 +294,20 @@ class IndexUpdater:
         1.0 when unquantised or no deltas have widened past the base."""
         with self._lock:
             index = self.index
-        base_scale = index.base.scale
-        if base_scale is None or not index.deltas:
+        if hasattr(index, "storage"):             # paged: extents carry it
+            exts = index.storage.extents
+            base_scale = exts[0].scale if exts else None
+            dscales = [e.scale for e in exts if e.kind == "delta"]
+        else:
+            base_scale = index.base.scale
+            dscales = [d.scale for d in index.deltas]
+        if base_scale is None or not dscales:
             return 1.0
         b = np.asarray(base_scale, np.float64)
         worst = 1.0
-        for d in index.deltas:
-            if d.scale is not None:
-                worst = max(worst, float(np.max(np.asarray(d.scale,
+        for s in dscales:
+            if s is not None:
+                worst = max(worst, float(np.max(np.asarray(s,
                                                            np.float64) / b)))
         return worst
 
@@ -324,6 +384,25 @@ class IndexUpdater:
             for lo in range(0, d.n_real, block_rows):
                 yield d.raw[lo:lo + block_rows]
 
+    def _compact_paged(self) -> None:
+        """Paged compaction: seal + promote every delta extent and drain
+        tail pages into free pool slots — pointer swaps plus ONE fused
+        gather dispatch, never a corpus rebuild. Cheap enough to run
+        entirely under the lock (no racing-append reconcile needed); on
+        disk it is a single lifecycle-block manifest swap (the page bytes
+        already mirrored at append time)."""
+        with self._lock:
+            new_index, stats = self.index.compact_pages()
+            if self.store is not None:
+                from repro.core.store import paged_manifest_block
+                self.store.set_paged_state(
+                    paged_manifest_block(new_index.storage))
+            self.index = new_index
+            self.compactions += 1
+            self.last_compaction = dict(stats)
+            if self.server is not None:
+                self.server.swap_index(new_index)
+
     def compact(self, *, block_rows: int = 65536) -> None:
         """Merge base + deltas into ONE fresh base segment and swap it in.
 
@@ -345,6 +424,9 @@ class IndexUpdater:
         with self._lock:
             snapshot, pruner = self.index, self.pruner
             store, n_compactions = self.store, self.compactions
+        if hasattr(snapshot, "compact_pages"):
+            self._compact_paged()
+            return
         quant = snapshot.quantized
         mesh = getattr(snapshot.base, "mesh", None)
         backend = snapshot.base.backend
@@ -395,6 +477,7 @@ class IndexUpdater:
                 self._mirror_ops(ops, fresh)
             self.index = fresh
             self.compactions += 1
+            self.last_compaction = {"rows_rebuilt": int(fresh.n)}
             if self.server is not None:
                 self.server.swap_index(fresh)
 
@@ -428,8 +511,11 @@ class IndexUpdater:
             errs = list(self.background_errors)
             compactions = self.compactions
             appended = self.appended_rows
+            last = (None if self.last_compaction is None
+                    else dict(self.last_compaction))
         return {"ok": not errs, "background_errors": errs,
-                "compactions": compactions, "appended_rows": appended}
+                "compactions": compactions, "appended_rows": appended,
+                "last_compaction": last}
 
     def refit(self, corpus: jax.Array) -> None:
         """Full offline refit (new rotation) on the current corpus
@@ -440,18 +526,28 @@ class IndexUpdater:
             old_index, old_pruner = self.index, self.pruner
         cutoff = old_pruner.effective_cutoff
         quant = old_index.quantized
-        mesh = getattr(old_index.base, "mesh", None)
-        backend = old_index.base.backend
+        paged = hasattr(old_index, "storage")
+        old_base = getattr(old_index, "base", None)
+        mesh = getattr(old_base, "mesh", None)
+        backend = old_index.backend if paged else old_base.backend
         pruner = StaticPruner(cutoff=cutoff).fit(corpus)
         if mesh is not None:
             base = ShardedDenseIndex.build(
                 pruner.prune_index(corpus), mesh, quantize_int8=quant,
-                backend=backend, merge=old_index.base.merge)
+                backend=backend, merge=old_base.merge)
         else:
             base = pruner.build_index(corpus, quantize_int8=quant,
                                       backend=backend)
-        new_index = SegmentedIndex.from_index(
-            base, delta_capacity=self.delta_capacity)
+        if paged:
+            from repro.core.paged import PagedIndex
+            new_index = PagedIndex.from_index(
+                base, page_rows=old_index.storage.page_rows,
+                seal_rows=old_index.storage.seal_rows,
+                backend=backend, depth=old_index.depth,
+                wave_pages=old_index.wave_pages)
+        else:
+            new_index = SegmentedIndex.from_index(
+                base, delta_capacity=self.delta_capacity)
         energy = captured_energy(corpus, pruner)
         with self._lock:
             self.pruner, self.index, self.fit_energy = (pruner, new_index,
@@ -461,8 +557,10 @@ class IndexUpdater:
                 # the old artifact is invalid under the new rotation —
                 # replace it atomically at the same path
                 from repro.core.store import save_index
-                self.store = save_index(self.store.path, self.index.base,
-                                        pruner=self.pruner)
+                self.store = save_index(
+                    self.store.path,
+                    self.index if paged else self.index.base,
+                    pruner=self.pruner)
             if self.server is not None:
                 self.server.swap_index(self.index, pruner=self.pruner)
 

@@ -106,6 +106,10 @@ def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
     import numpy as _np
     from repro.core.cascade import CascadeIndex
     from repro.core.index import SegmentedIndex
+    from repro.core.paged import PagedIndex
+    if isinstance(index, PagedIndex):
+        return save_paged_index(path, index, pruner=pruner, meta=meta,
+                                chunk_rows=chunk_rows)
     if isinstance(index, CascadeIndex):
         # full resolution commits through the normal (possibly segmented)
         # path; the coarse base rides along as a `resolutions` entry, so
@@ -116,16 +120,33 @@ def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
         # full deltas.
         store = save_index(path, index.full, pruner=pruner, meta=meta,
                            chunk_rows=chunk_rows)
-        coarse_base = getattr(index.coarse, "base", index.coarse)
-        coarse_deltas = [
-            {"rows": _np.asarray(d.vectors[:d.n_real]),
-             "scale": None if d.scale is None else _np.asarray(d.scale),
-             "capacity": d.capacity}
-            for d in getattr(index.coarse, "deltas", ())]
+        coarse = index.coarse
+        if hasattr(coarse, "storage"):
+            # paged coarse side: extent 0 is the resolution base, later
+            # extents persist as resolution deltas — bytes gathered
+            # straight off the page tiers
+            cst = coarse.storage
+            exts = cst.extents
+            base_rows = (cst.extent_rows(0) if exts
+                         else _np.zeros((0, cst.dim), cst.np_dtype))
+            base_scale = exts[0].scale if exts else None
+            coarse_deltas = [
+                {"rows": cst.extent_rows(i),
+                 "scale": None if e.scale is None else _np.asarray(e.scale),
+                 "capacity": cst.seal_rows}
+                for i, e in enumerate(exts) if i > 0]
+        else:
+            coarse_base = getattr(coarse, "base", coarse)
+            base_rows = _np.asarray(coarse_base.vectors[:coarse_base.n])
+            base_scale = coarse_base.scale
+            coarse_deltas = [
+                {"rows": _np.asarray(d.vectors[:d.n_real]),
+                 "scale": None if d.scale is None else _np.asarray(d.scale),
+                 "capacity": d.capacity}
+                for d in getattr(coarse, "deltas", ())]
         store.add_resolution(
-            _np.asarray(coarse_base.vectors[:coarse_base.n]),
-            scale=None if coarse_base.scale is None
-            else _np.asarray(coarse_base.scale),
+            base_rows,
+            scale=None if base_scale is None else _np.asarray(base_scale),
             chunk_rows=chunk_rows, deltas=coarse_deltas)
         return store
     if isinstance(index, SegmentedIndex):
@@ -159,6 +180,64 @@ def save_index(path: str, index, *, pruner=None, meta: dict | None = None,
         info["quantize_int8"] = index.scale is not None
         info.update(meta or {})
         return writer.commit(meta=info)
+
+
+def paged_manifest_block(storage) -> dict:
+    """The ``paged`` manifest entry for a ``PagedIndexStorage``: page
+    geometry plus per-extent lifecycle state (kind/sealed). The page map
+    itself is positional — extent i's rows are store segment i's rows,
+    paged into ``page_rows``-row pages ascending — so the block stays tiny
+    and every byte is validated through the existing segment machinery."""
+    return {"page_rows": int(storage.page_rows),
+            "seal_rows": int(storage.seal_rows),
+            "extents": [{"kind": e.kind, "sealed": bool(e.sealed),
+                         "n": int(e.n_rows)} for e in storage.extents]}
+
+
+def save_paged_index(path: str, index, *, pruner=None,
+                     meta: dict | None = None,
+                     chunk_rows: int = 262144) -> "IndexStore":
+    """Persist a ``PagedIndex``: one store segment per extent (page-granular
+    chunks — every blob boundary is page-aligned) plus the ``paged``
+    manifest block. Bytes are gathered straight off the page tiers
+    (pool/tail/host alike), so the artifact is bit-identical to what was
+    serving; the final ``set_paged_state`` manifest swap is the commit
+    point for the lifecycle metadata."""
+    import numpy as _np
+    st = index.storage
+    R = st.page_rows
+    # page-align the chunking: whole pages per blob, never a split page
+    chunk_rows = max(chunk_rows // R, 1) * R
+    exts = st.extents
+    writer = IndexStoreWriter(path)
+    with writer:
+        if pruner is not None:
+            writer.put_pca(pruner.state)
+        base_scale = exts[0].scale if exts else None
+        if base_scale is not None:
+            writer.set_scale(_np.asarray(base_scale))
+        if exts:
+            rows = st.extent_rows(0)
+            for s in range(0, rows.shape[0], chunk_rows):
+                writer.append(rows[s:s + chunk_rows])
+        info = {} if pruner is None else dict(
+            kept_dims=int(pruner.kept_dims),
+            source_dim=int(pruner.state.d),
+            cutoff=float(pruner.effective_cutoff),
+            centered=bool(pruner.state.centered))
+        info["quantize_int8"] = st.quantized
+        info.update(meta or {})
+        store = writer.commit(meta=info)
+    for ei in range(1, len(exts)):
+        e = exts[ei]
+        name = store.add_delta(
+            scale=None if e.scale is None else _np.asarray(e.scale),
+            capacity=st.seal_rows)
+        rows = st.extent_rows(ei)
+        for s in range(0, rows.shape[0], chunk_rows):
+            store.append(rows[s:s + chunk_rows], segment=name)
+    store.set_paged_state(paged_manifest_block(st))
+    return store
 
 
 def _as_numpy_dtype(logical: str):
@@ -443,6 +522,7 @@ class IndexStore:
                         f"{self.path}: segment {s['name']} holds {s['n']} "
                         f"rows over its capacity {cap}")
         self._validate_resolutions()
+        self._validate_paged()
 
     def _validate_resolutions(self) -> None:
         """A coarse resolution must be a nested, row-aligned view of the
@@ -526,6 +606,47 @@ class IndexStore:
                     raise IndexStoreError(
                         f"{self.path}: resolution delta {d['name']} "
                         f"missing scale blob {sf}")
+
+    def _validate_paged(self) -> None:
+        """The ``paged`` block must describe the segment list it rides on.
+
+        Append mirroring is two swaps (segment op, then lifecycle block),
+        so the block may LAG the segments after a crash between them —
+        fewer extents than segments, or a stale smaller row count — and
+        the loader reconstructs the missing state conservatively. It must
+        never LEAD: an extent claiming rows (or a whole extent) the
+        segments don't hold is a torn artifact and is rejected."""
+        pb = self.manifest.get("paged")
+        if pb is None:
+            return
+        for key in ("page_rows", "seal_rows", "extents"):
+            if key not in pb:
+                raise IndexStoreError(
+                    f"{self.path}: paged block missing {key!r}")
+        if int(pb["page_rows"]) <= 0 or int(pb["seal_rows"]) <= 0:
+            raise IndexStoreError(
+                f"{self.path}: paged block needs positive page_rows/"
+                f"seal_rows, got {pb['page_rows']}/{pb['seal_rows']}")
+        exts = pb["extents"]
+        entries = self._segment_entries() if int(self.manifest["n"]) else []
+        if len(exts) > len(entries):
+            raise IndexStoreError(
+                f"{self.path}: paged block lists {len(exts)} extents but "
+                f"the store holds {len(entries)} segments")
+        for i, e in enumerate(exts):
+            if e.get("kind") not in ("base", "delta"):
+                raise IndexStoreError(
+                    f"{self.path}: paged extent {i} has kind "
+                    f"{e.get('kind')!r} (need base|delta)")
+            if int(e["n"]) > int(entries[i]["n"]):
+                raise IndexStoreError(
+                    f"{self.path}: paged extent {i} claims {e['n']} rows, "
+                    f"segment {entries[i]['name']} holds {entries[i]['n']}")
+            if not e.get("sealed", True) and (i != len(exts) - 1
+                                              or e["kind"] != "delta"):
+                raise IndexStoreError(
+                    f"{self.path}: paged extent {i} is unsealed but only "
+                    f"the last delta extent may be open")
 
     # -- shape -------------------------------------------------------------
     @property
@@ -795,6 +916,14 @@ class IndexStore:
         manifest["n"] = sum(int(s["n"]) for s in segs)
         manifest["scale_file"] = segs[0].get("scale_file")
         return manifest
+
+    def set_paged_state(self, block: dict) -> None:
+        """Install/replace the ``paged`` lifecycle block in one manifest
+        swap. Page bytes never move: promote and compact are pointer swaps
+        in memory and exactly this metadata swap on disk."""
+        manifest = json.loads(json.dumps(self.manifest))   # deep copy
+        manifest["paged"] = block
+        self._swap_manifest(manifest)
 
     def add_delta(self, scale: np.ndarray | None = None,
                   capacity: int | None = None) -> str:

@@ -46,6 +46,19 @@ live-index lifecycle under traffic, zero steady-state recompiles.
 {8, 16, …, max_batch} instead of always max_batch (less pad compute at
 low load for a handful of extra compiles).
 
+``--paged`` serves through a ``PagedIndex``: the index lives in
+fixed-size pages behind an int32 indirection table, so live appends,
+delta promotion, compaction and eviction are page-pointer swaps — no
+array rebuilds, no per-segment-count recompiles. ``--page-rows R`` sets
+the page geometry (rows per page) and ``--page-pool P`` caps the
+device-resident pool at P pages: an index larger than the pool keeps its
+overflow pages host-side and streams them through the double-buffered
+DMA pipeline on demand (oversubscription). Composes with
+``--live-append`` (the updater mirrors page lifecycle ops to the store),
+``--cascade`` (both resolutions page), and ``--save-index`` /
+``--load-index`` (the page map rides the manifest; a paged artifact is
+auto-detected). ``--sharded`` is not supported.
+
 ``--cascade M:N`` serves through a two-resolution ``CascadeIndex``:
 a coarse scan over the first M PCA dims (int8) keeps N·k candidates per
 query, then one small exact rescore at full m picks the final top-k —
@@ -77,6 +90,12 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --cascade 64:8 \
       --live-append 300          # cascade + live appends: both resolutions
                                  # grow and swap atomically as one object
+  PYTHONPATH=src python -m repro.launch.serve --paged --page-rows 256 \
+      --live-append 300          # paged index: appends/compaction are
+                                 # page-pointer swaps, zero recompiles
+  PYTHONPATH=src python -m repro.launch.serve --load-index /tmp/idx \
+      --paged --page-pool 96     # oversubscribed: pool capped at 96
+                                 # pages, the rest stream from host
 """
 from __future__ import annotations
 
@@ -860,6 +879,21 @@ def main() -> None:
                     help="sharded candidate merge: one all-gather over "
                          "every device, or two stages over a factored mesh")
     ap.add_argument("--quantize-int8", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through a PagedIndex: fixed-size pages "
+                         "behind an indirection table — appends, "
+                         "promotion, compaction and eviction are "
+                         "page-pointer swaps (zero steady-state "
+                         "recompiles), and the index may exceed device "
+                         "memory (see --page-pool)")
+    ap.add_argument("--page-rows", type=int, default=0, metavar="R",
+                    help="rows per page (default: 256, or the artifact's "
+                         "page geometry under --load-index)")
+    ap.add_argument("--page-pool", type=int, default=0, metavar="P",
+                    help="cap the device-resident page pool at P pages; "
+                         "overflow pages stay host-side and stream "
+                         "through the DMA pipeline on demand "
+                         "(default: everything resident)")
     ap.add_argument("--cascade", default=None, metavar="M:N",
                     help="serve a two-resolution cascade: coarse scan over "
                          "the first M PCA dims (int8) keeps N*k candidates "
@@ -886,6 +920,14 @@ def main() -> None:
     args = ap.parse_args()
     if args.save_index and args.load_index:
         ap.error("--save-index and --load-index are mutually exclusive")
+    if args.paged and args.sharded:
+        ap.error("--paged does not compose with --sharded yet "
+                 "(paged per-shard pools: see ROADMAP)")
+    if args.paged and args.fleet > 0:
+        ap.error("--paged does not compose with --fleet yet "
+                 "(paged replicas load via the store auto-detect path)")
+    page_rows = args.page_rows or 256
+    pool_pages = args.page_pool or None
     cascade_mn = None
     if args.cascade:
         if args.sharded:
@@ -943,10 +985,23 @@ def main() -> None:
                                       n_factor=cascade_mn[1],
                                       backend=args.backend,
                                       segmented=args.live_append > 0,
+                                      paged=args.paged,
+                                      page_rows=args.page_rows or None,
+                                      pool_pages=pool_pages,
                                       delta_capacity=args.delta_capacity)
             print(f"[serve] loaded cascade: {index.n} x {index.dim} "
                   f"(+ coarse m={index.m_coarse}, shortlist "
-                  f"{index.n_factor}*k, {index.nbytes/2**20:.1f} MiB)")
+                  f"{index.n_factor}*k, {index.nbytes/2**20:.1f} MiB"
+                  f"{', paged' if args.paged else ''})")
+        elif args.paged or "paged" in store.manifest:
+            from repro.core.paged import PagedIndex
+            index = PagedIndex.load(store, backend=args.backend,
+                                    page_rows=args.page_rows or None,
+                                    pool_pages=pool_pages)
+            stg = index.storage
+            print(f"[serve] loaded paged index: {index.n} x {index.dim} "
+                  f"({index.nbytes/2**20:.1f} MiB, {stg.n_slots} pages "
+                  f"x {stg.page_rows} rows, {stg.n_host_pages} host-tier)")
         else:
             index = DenseIndex.load(store, backend=args.backend)
             print(f"[serve] loaded index: {index.n} x {index.dim} "
@@ -986,9 +1041,25 @@ def main() -> None:
                                        n_factor=cascade_mn[1],
                                        quantize_int8=args.quantize_int8,
                                        backend=args.backend)
+            if args.paged:
+                index = index.paged(page_rows=page_rows,
+                                    pool_pages=pool_pages,
+                                    seal_rows=args.delta_capacity)
             print(f"[serve] cascade index: {index.n} x {index.dim} "
                   f"(+ coarse m={index.m_coarse} int8, shortlist "
-                  f"{index.n_factor}*k, {index.nbytes/2**20:.1f} MiB)")
+                  f"{index.n_factor}*k, {index.nbytes/2**20:.1f} MiB"
+                  f"{', paged' if args.paged else ''})")
+        elif args.paged:
+            from repro.core.paged import PagedIndex
+            base = DenseIndex.build(pruned, quantize_int8=args.quantize_int8)
+            index = PagedIndex.from_index(base, page_rows=page_rows,
+                                          pool_pages=pool_pages,
+                                          seal_rows=args.delta_capacity,
+                                          backend=args.backend)
+            stg = index.storage
+            print(f"[serve] paged index: {index.n} x {index.dim} "
+                  f"({index.nbytes/2**20:.1f} MiB, {stg.n_slots} pages "
+                  f"x {stg.page_rows} rows, {stg.n_host_pages} host-tier)")
         else:
             index = DenseIndex.build(pruned, quantize_int8=args.quantize_int8,
                                      backend=args.backend)
@@ -1014,7 +1085,8 @@ def main() -> None:
         # swap-between-batches discipline directly; only this thread ever
         # rebinds the local, so no extra lock is needed.
         from repro.core import SegmentedIndex
-        if not isinstance(index.full, SegmentedIndex):
+        if not (isinstance(index.full, SegmentedIndex)
+                or hasattr(index.full, "storage")):
             index = index.segmented(delta_capacity=args.delta_capacity)
         server.swap_index(index)
         rng_app = np.random.default_rng(123)
@@ -1045,8 +1117,13 @@ def main() -> None:
     elif args.live_append > 0:
         from repro.core import SegmentedIndex
         from repro.core.maintenance import IndexUpdater
-        seg = SegmentedIndex.from_index(index,
-                                        delta_capacity=args.delta_capacity)
+        if hasattr(index, "storage"):
+            # already paged: appends/compaction are page-pointer swaps on
+            # the same object — no segmented wrapper needed
+            seg = index
+        else:
+            seg = SegmentedIndex.from_index(
+                index, delta_capacity=args.delta_capacity)
         server.swap_index(seg)
         updater = IndexUpdater(pruner=pruner, index=seg, server=server,
                                delta_capacity=args.delta_capacity)
@@ -1099,27 +1176,42 @@ def main() -> None:
               f"worker={ostats['worker_qps']:.1f} qps "
               f"({ostats['occupancy']*100:.0f}% occupancy)")
 
+    def _delta_units(idx) -> str:
+        if hasattr(idx, "storage"):
+            n_ext = sum(1 for e in idx.storage.extents if e.kind == "delta")
+            return f"{idx.storage.delta_pages} delta page(s), {n_ext} extent(s)"
+        return f"{len(idx.deltas)} delta segment(s)"
+
     if cascade_app is not None:
         append_stop.set()
         appender.join(timeout=30.0)
         cas = cascade_app["index"]
         print(f"[serve] live-append (cascade): +{cascade_app['rows']} rows "
-              f"in {len(cas.full.deltas)} delta segment(s) per resolution, "
+              f"in {_delta_units(cas.full)} per resolution, "
               f"{server.swap_count} atomic swaps; index now {cas.n} rows "
               f"(both resolutions)")
     if updater is not None:
         append_stop.set()
         appender.join(timeout=30.0)
         print(f"[serve] live-append: +{updater.appended_rows} rows in "
-              f"{len(updater.index.deltas)} delta segment(s), "
+              f"{_delta_units(updater.index)}, "
               f"{server.swap_count} atomic swaps; index now "
               f"{updater.index.n} rows")
         t0 = time.perf_counter()
         updater.compact()
-        print(f"[serve] compaction: base+deltas -> one fresh base "
-              f"({updater.index.n} rows, fresh scale) in "
-              f"{(time.perf_counter() - t0)*1e3:.0f}ms; server swapped "
-              f"mid-serve (swap #{server.swap_count})")
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        lc = updater.last_compaction or {}
+        if "pages_moved" in lc:
+            print(f"[serve] compaction (paged): {lc['pages_moved']} pages "
+                  f"moved, {lc['pages_freed']} freed, {lc['pages_host']} "
+                  f"host-tier, in {dt_ms:.0f}ms — pointer swaps, no "
+                  f"rebuild; server swapped mid-serve "
+                  f"(swap #{server.swap_count})")
+        else:
+            print(f"[serve] compaction: base+deltas -> one fresh base "
+                  f"({updater.index.n} rows, fresh scale) in "
+                  f"{dt_ms:.0f}ms; server swapped "
+                  f"mid-serve (swap #{server.swap_count})")
     server.close()
 
     if args.compare_full and args.load_index:

@@ -1,0 +1,676 @@
+"""Paged index memory: kernel, parity, lifecycle, store, serving.
+
+The acceptance surface of the paged architecture:
+  * ``topk_score_paged_pallas`` walks a scrambled two-tier page table
+    (pool + tail) bit-identically to the contiguous fused kernel — f32
+    and int8 (per-page scales folded into the query), partial last page
+    masked by ``n_valid``, run-split carry chaining, ``ids_pool`` rescore
+    mode, any pipeline depth;
+  * ``PagedIndex`` search is BIT-IDENTICAL to ``SegmentedIndex`` at equal
+    contents — dense x {f32, int8} x {jnp, pallas}, through appends,
+    promotion, compaction, eviction (host-tier streaming), and the
+    cascade rescore path;
+  * promotion / compaction / eviction are page-pointer swaps: results
+    never change, and a full lifecycle never grows the jit cache once
+    every variant is warm;
+  * paged artifacts round-trip through ``IndexStore`` page-granularly
+    (chunk boundaries page-aligned, host-tier pages included, bytes
+    identical from either residency), reject corruption/truncation and a
+    paged block that LEADS the segments, and accept a lagging block (the
+    crash window);
+  * ``RetrievalServer`` under live append+promote+compact traffic and
+    under eviction/readmission swaps drops no reply and misroutes none;
+  * ``IndexUpdater`` telemetry is page-based on a paged index:
+    ``delta_fraction`` counts pages and ``last_compaction`` reports pages
+    moved/freed/host — not rows copied.
+"""
+import dataclasses
+import json
+import os
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DenseIndex, SegmentedIndex, StaticPruner
+from repro.core.index import segment_jit_cache_size
+from repro.core.maintenance import IndexUpdater
+from repro.core.paged import PagedIndex, PagedIndexStorage
+from repro.core.store import (
+    IndexStore,
+    IndexStoreError,
+    save_index,
+    save_paged_index,
+)
+from repro.kernels.topk_score import topk_score_paged_pallas, topk_score_pallas
+
+RNG = np.random.default_rng(170)
+
+
+def _assert_same(a, b, msg=""):
+    assert jnp.array_equal(a[0], b[0]), f"scores diverged {msg}"
+    assert jnp.array_equal(a[1], b[1]), f"ids diverged {msg}"
+
+
+# ---------------------------------------------------------------------------
+# kernel: two-tier paged walk vs the contiguous fused kernel
+# ---------------------------------------------------------------------------
+
+
+def _two_tier_fixture(dtype=np.float32, seed=0):
+    """Corpus scattered over a scrambled pool+tail page layout: logical
+    slot j lives at physical page perm[j], the last page is partial."""
+    rng = np.random.default_rng(seed)
+    R, m, B, k = 8, 32, 5, 7
+    npages, n_last = 11, 3
+    n = (npages - 1) * R + n_last
+    D = rng.standard_normal((n, m)).astype(np.float32)
+    Q = rng.standard_normal((B, m)).astype(np.float32)
+    pool_pages, tail_pages, table_cap = 7, 6, 16
+    perm = rng.permutation(npages)
+    pt = np.full(table_cap, -1, np.int32)
+    pt[:npages] = perm
+    nv = np.zeros(table_cap, np.int32)
+    nv[:npages] = R
+    nv[npages - 1] = n_last
+    off = np.zeros(table_cap, np.int32)
+    off[:npages] = np.arange(npages) * R
+    pool = np.zeros((pool_pages, R, m), dtype)
+    tail = np.zeros((tail_pages, R, m), dtype)
+    return (R, m, B, k, npages, n, D, Q, pool_pages, table_cap, pt, nv, off,
+            pool, tail)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_paged_kernel_two_tier_partial_last_page(depth):
+    (R, m, B, k, npages, n, D, Q, pool_pages, _tc, pt, nv, off, pool,
+     tail) = _two_tier_fixture()
+    for j in range(npages):
+        phys = pt[j]
+        buf, idx = (pool, phys) if phys < pool_pages \
+            else (tail, phys - pool_pages)
+        buf[idx, :nv[j]] = D[j * R: j * R + nv[j]]
+    ref = topk_score_pallas(jnp.asarray(D), jnp.asarray(Q), k=k,
+                            block_n=R * npages, interpret=True)
+    got = topk_score_paged_pallas(
+        jnp.asarray(pool), jnp.asarray(pt), jnp.asarray(nv),
+        jnp.asarray(off), jnp.int32(0), jnp.int32(npages), jnp.asarray(Q),
+        k=k, tail=jnp.asarray(tail), depth=depth, interpret=True)
+    _assert_same(got, ref, f"depth={depth}")
+
+
+def test_paged_kernel_run_split_carry_matches_single_pass():
+    (R, m, B, k, npages, n, D, Q, pool_pages, _tc, pt, nv, off, pool,
+     tail) = _two_tier_fixture(seed=1)
+    for j in range(npages):
+        phys = pt[j]
+        buf, idx = (pool, phys) if phys < pool_pages \
+            else (tail, phys - pool_pages)
+        buf[idx, :nv[j]] = D[j * R: j * R + nv[j]]
+    args = (jnp.asarray(pool), jnp.asarray(pt), jnp.asarray(nv),
+            jnp.asarray(off))
+    ref = topk_score_paged_pallas(*args, jnp.int32(0), jnp.int32(npages),
+                                  jnp.asarray(Q), k=k,
+                                  tail=jnp.asarray(tail), depth=2,
+                                  interpret=True)
+    part = topk_score_paged_pallas(*args, jnp.int32(0), jnp.int32(4),
+                                   jnp.asarray(Q), k=k,
+                                   tail=jnp.asarray(tail), depth=2,
+                                   finalize=False, interpret=True)
+    got = topk_score_paged_pallas(*args, jnp.int32(4), jnp.int32(npages),
+                                  jnp.asarray(Q), k=k,
+                                  tail=jnp.asarray(tail), depth=2,
+                                  carry=part, interpret=True)
+    _assert_same(got, ref, "run-split carry")
+
+
+def test_paged_kernel_int8_per_page_scale():
+    (R, m, B, k, npages, n, D, Q, pool_pages, table_cap, pt, nv, off, _p,
+     _t) = _two_tier_fixture(seed=2)
+    scale = np.stack([
+        np.abs(D[j * R:(j + 1) * R]).max(axis=0).clip(1e-12) / 127.0
+        for j in range(npages)]).astype(np.float32)
+    pool8 = np.zeros((pool_pages, R, m), np.int8)
+    tail8 = np.zeros((6, R, m), np.int8)
+    D8 = np.zeros_like(D, np.int8)
+    for j in range(npages):
+        rows = D[j * R: j * R + nv[j]]
+        q8 = np.clip(np.round(rows / scale[j][None, :]), -127,
+                     127).astype(np.int8)
+        D8[j * R: j * R + nv[j]] = q8
+        phys = pt[j]
+        buf, idx = (pool8, phys) if phys < pool_pages \
+            else (tail8, phys - pool_pages)
+        buf[idx, :nv[j]] = q8
+    ps = np.zeros((table_cap, m), np.float32)
+    ps[:npages] = scale
+    # reference: per-page scale folded into the query, jnp dot per page
+    parts_s, parts_i = [], []
+    for j in range(npages):
+        qf = jnp.asarray(Q) * jnp.asarray(scale[j])[None, :]
+        sj = jax.lax.dot_general(
+            qf, jnp.asarray(D8[j * R: j * R + nv[j]]).astype(jnp.float32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        parts_s.append(sj)
+        parts_i.append(jnp.asarray(np.arange(
+            j * R, j * R + nv[j], dtype=np.int32)[None, :].repeat(B, 0)))
+    cat_s = jnp.concatenate(parts_s, axis=1)
+    cat_i = jnp.concatenate(parts_i, axis=1)
+    rs, ridx = jax.lax.top_k(cat_s, k)
+    ref = (rs, jnp.take_along_axis(cat_i, ridx, axis=1))
+    got = topk_score_paged_pallas(
+        jnp.asarray(pool8), jnp.asarray(pt), jnp.asarray(nv),
+        jnp.asarray(off), jnp.int32(0), jnp.int32(npages), jnp.asarray(Q),
+        k=k, tail=jnp.asarray(tail8), page_scale=jnp.asarray(ps), depth=2,
+        interpret=True)
+    _assert_same(got, ref, "int8 per-page scale")
+
+
+def test_paged_kernel_ids_pool_rescore_mode():
+    (R, m, B, k, npages, n, D, Q, pool_pages, table_cap, pt, nv, off, pool,
+     tail) = _two_tier_fixture(seed=3)
+    for j in range(npages):
+        phys = pt[j]
+        buf, idx = (pool, phys) if phys < pool_pages \
+            else (tail, phys - pool_pages)
+        buf[idx, :nv[j]] = D[j * R: j * R + nv[j]]
+    ids_pool = np.full((table_cap, R), -1, np.int32)
+    for j in range(npages):
+        ids_pool[j, :nv[j]] = np.arange(j * R, j * R + nv[j], dtype=np.int32)
+    ref = topk_score_pallas(
+        jnp.asarray(D), jnp.asarray(Q), k=k, block_n=R * npages,
+        row_ids=jnp.asarray(np.arange(n, dtype=np.int32)), interpret=True)
+    got = topk_score_paged_pallas(
+        jnp.asarray(pool), jnp.asarray(pt), jnp.asarray(nv),
+        jnp.asarray(off), jnp.int32(0), jnp.int32(npages), jnp.asarray(Q),
+        k=k, tail=jnp.asarray(tail), ids_pool=jnp.asarray(ids_pool),
+        depth=2, interpret=True)
+    _assert_same(got, ref, "ids_pool rescore")
+
+
+# ---------------------------------------------------------------------------
+# PagedIndex vs SegmentedIndex: bit parity through the full lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", [False, True], ids=["f32", "int8"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_paged_parity_lifecycle(quant, backend):
+    rng = np.random.default_rng(1)
+    n, d, m, B, k = 500, 48, 24, 6, 9
+    X = rng.standard_normal((n, m)).astype(np.float32)
+    W = jnp.asarray(rng.standard_normal((d, m)).astype(np.float32) * 0.2)
+    mean = jnp.asarray(rng.standard_normal(d).astype(np.float32) * 0.1)
+    Qraw = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+    Qm = jnp.asarray(rng.standard_normal((B, m)).astype(np.float32))
+    base = DenseIndex.build(jnp.asarray(X), quantize_int8=quant,
+                            backend=backend)
+    seg = SegmentedIndex.from_index(base, delta_capacity=96)
+    pg = PagedIndex.from_index(base, page_rows=32, seal_rows=96,
+                               backend=backend)
+    _assert_same(pg.search(Qm, k), seg.search(Qm, k), "base")
+    _assert_same(pg.search_projected(Qraw, W, k, mean=mean),
+                 seg.search_projected(Qraw, W, k, mean=mean),
+                 "base projected")
+    # appends, including a big-magnitude block that widens the int8 scale
+    blocks = [rng.standard_normal((37, m)).astype(np.float32),
+              (rng.standard_normal((20, m)) * 9.0).astype(np.float32),
+              rng.standard_normal((150, m)).astype(np.float32)]
+    for bl in blocks:
+        seg = seg.append(bl)
+        pg = pg.append(bl)
+    _assert_same(pg.search(Qm, k), seg.search(Qm, k), "after appends")
+    _assert_same(pg.search_projected(Qraw, W, k, mean=mean),
+                 seg.search_projected(Qraw, W, k, mean=mean),
+                 "appends projected")
+    # promotion and compaction are pointer swaps: results must not move
+    ref = pg.search(Qm, k)
+    pg, _ = pg.promote()
+    _assert_same(pg.search(Qm, k), ref, "after promote")
+    pg, stats = pg.compact_pages()
+    _assert_same(pg.search(Qm, k), ref, "after compact")
+    assert pg.delta_pages == 0
+    # eviction: same contents, host-tier streaming, same bits
+    pg, nev = pg.evict(7)
+    assert pg.storage.n_host_pages >= 7, nev
+    _assert_same(pg.search(Qm, k), ref, "oversubscribed")
+    _assert_same(pg.search_projected(Qraw, W, k, mean=mean),
+                 seg.search_projected(Qraw, W, k, mean=mean),
+                 "oversubscribed projected")
+    # append while oversubscribed. Compaction SEALED the open delta, so a
+    # post-compact int8 append opens a fresh extent with a fresh scale —
+    # compare against the OTHER backend (cross-backend self-parity), not
+    # the never-compacted segmented index.
+    pg = pg.append(blocks[0])
+    if quant:
+        other = dataclasses.replace(
+            pg, backend="pallas" if backend == "jnp" else "jnp")
+        _assert_same(pg.search(Qm, k), other.search(Qm, k),
+                     "oversub append xbackend")
+    else:
+        _assert_same(pg.search(Qm, k), seg.append(blocks[0]).search(Qm, k),
+                     "oversub append")
+
+
+def test_paged_construction_oversubscription_parity():
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((500, 24)).astype(np.float32)
+    Qm = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    base = DenseIndex.build(jnp.asarray(X), quantize_int8=True,
+                            backend="pallas")
+    seg = SegmentedIndex.from_index(base, delta_capacity=96)
+    pg = PagedIndex.from_index(base, page_rows=32, pool_pages=6,
+                               seal_rows=96, backend="pallas")
+    assert pg.storage.n_host_pages > 0
+    _assert_same(pg.search(Qm, 8), seg.search(Qm, 8), "construction oversub")
+
+
+def test_paged_from_segmented_adopts_bytes():
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((400, 24)).astype(np.float32)
+    Qm = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    seg = SegmentedIndex.from_index(
+        DenseIndex.build(jnp.asarray(X), quantize_int8=True),
+        delta_capacity=96)
+    seg = seg.append(rng.standard_normal((130, 24)).astype(np.float32))
+    pg = PagedIndex.from_segmented(seg, page_rows=32)
+    _assert_same(pg.search(Qm, 8), seg.search(Qm, 8), "from_segmented")
+    # continued appends stay in lockstep, including a widening block
+    bl = (rng.standard_normal((25, 24)) * 8.0).astype(np.float32)
+    _assert_same(pg.append(bl).search(Qm, 8), seg.append(bl).search(Qm, 8),
+                 "continued append + widen")
+
+
+def test_paged_cascade_rescore_parity():
+    from repro.core.cascade import _cascade_select, _segment_rescore
+    rng = np.random.default_rng(4)
+    X = rng.standard_normal((400, 24)).astype(np.float32)
+    qf = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    seg = SegmentedIndex.from_index(
+        DenseIndex.build(jnp.asarray(X), quantize_int8=True),
+        delta_capacity=96)
+    seg = seg.append(rng.standard_normal((130, 24)).astype(np.float32))
+    pg = PagedIndex.from_segmented(seg, page_rows=32)
+    uids = jnp.sort(jnp.asarray(
+        rng.choice(seg.n, size=40, replace=False).astype(np.int32)))
+    parts, off = [], seg.base.n
+    segs = [(seg.base.vectors, seg.base.scale, 0, seg.base.n)]
+    for dd in seg.deltas:
+        segs.append((dd.vectors, dd.scale, off, dd.n_real))
+        off += dd.n_real
+    for D, sc, o, nvalid in segs:
+        parts.append(_segment_rescore(D, sc, qf, uids, jnp.int32(o),
+                                      jnp.int32(nvalid)))
+    ref = _cascade_select(tuple(parts), uids, 8)
+    _assert_same(_cascade_select((pg.rescore(qf, uids),), uids, 8), ref,
+                 "paged rescore")
+    # rescore with host-tier pages streams waves, same bits
+    pgo, _ = pg.evict(9)
+    _assert_same(_cascade_select((pgo.rescore(qf, uids),), uids, 8), ref,
+                 "paged rescore oversubscribed")
+
+
+def test_paged_k_exceeding_n_clamps_like_segmented():
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((5, 24)).astype(np.float32)
+    Qm = jnp.asarray(rng.standard_normal((3, 24)).astype(np.float32))
+    small = DenseIndex.build(jnp.asarray(X))
+    _assert_same(PagedIndex.from_index(small, page_rows=32).search(Qm, 50),
+                 SegmentedIndex.from_index(small).search(Qm, 50), "k>n")
+
+
+def test_paged_lifecycle_zero_recompiles_across_page_counts():
+    """Append -> search -> promote -> compact -> search at growing page
+    counts: the page count is data ([lo,hi) is traced), so once every
+    variant is warm the jit cache must not move."""
+    rng = np.random.default_rng(6)
+    m = 24
+    X = rng.standard_normal((256, m)).astype(np.float32)
+    Qm = jnp.asarray(rng.standard_normal((4, m)).astype(np.float32))
+    pg = PagedIndex.from_index(
+        DenseIndex.build(jnp.asarray(X), quantize_int8=True),
+        page_rows=32, seal_rows=64)
+
+    def lifecycle(pg, rows):
+        pg = pg.append(rng.standard_normal((rows, m)).astype(np.float32))
+        pg.search(Qm, 6)
+        pg, _ = pg.promote()
+        pg, _ = pg.compact_pages()
+        jax.block_until_ready(pg.search(Qm, 6)[0])
+        return pg
+
+    pg = lifecycle(pg, 48)           # warmup: compile every resident path
+    j0 = segment_jit_cache_size()
+    counts = set()
+    for rows in (32, 48, 80, 96):
+        pg = lifecycle(pg, rows)
+        counts.add(pg.total_pages)
+    assert len(counts) > 1, "page count never changed — sweep is vacuous"
+    assert segment_jit_cache_size() == j0, \
+        "page-count growth leaked into a static jit key"
+
+
+# ---------------------------------------------------------------------------
+# store: page-granular round-trip, corruption, crash-window manifests
+# ---------------------------------------------------------------------------
+
+
+def _grown_paged(quant, seed=30):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((400, 24)).astype(np.float32)
+    pg = PagedIndex.from_index(
+        DenseIndex.build(jnp.asarray(X), quantize_int8=quant),
+        page_rows=32, seal_rows=96)
+    pg = pg.append(rng.standard_normal((50, 24)).astype(np.float32))
+    pg = pg.append((rng.standard_normal((60, 24)) * 6).astype(np.float32))
+    return pg
+
+
+@pytest.mark.parametrize("quant", [False, True], ids=["f32", "int8"])
+def test_paged_store_roundtrip_page_granular(tmp_path, quant):
+    rng = np.random.default_rng(31)
+    Qm = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    pg = _grown_paged(quant)
+    p = str(tmp_path / "idx")
+    st = save_index(p, pg)                       # isinstance dispatch branch
+    assert "paged" in st.manifest
+    pg2 = PagedIndex.load(IndexStore.open(p))
+    _assert_same(pg2.search(Qm, 8), pg.search(Qm, 8), "roundtrip")
+    # geometry and lifecycle state survive the round-trip
+    assert pg2.storage.page_rows == 32 and pg2.storage.seal_rows == 96
+    assert ([(e.kind, e.sealed) for e in pg2.storage.extents]
+            == [(e.kind, e.sealed) for e in pg.storage.extents])
+    # every non-final chunk boundary is page-aligned
+    for s in st.manifest["segments"]:
+        for c in s["chunks"][:-1]:
+            assert c["rows"] % 32 == 0, c
+
+
+def test_paged_store_host_tier_pages_roundtrip(tmp_path):
+    """Saving from an oversubscribed (host-tier) storage writes the same
+    bytes as saving the fully resident equivalent."""
+    rng = np.random.default_rng(32)
+    Qm = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    pg = _grown_paged(True)
+    pr, po = str(tmp_path / "resident"), str(tmp_path / "oversub")
+    save_paged_index(pr, pg)
+    pg4 = PagedIndex.load(IndexStore.open(pr), pool_pages=5)
+    assert pg4.storage.n_host_pages > 0
+    _assert_same(pg4.search(Qm, 8), pg.search(Qm, 8), "oversubscribed load")
+    save_paged_index(po, pg4)
+    pg5 = PagedIndex.load(IndexStore.open(po))
+    _assert_same(pg5.search(Qm, 8), pg.search(Qm, 8), "host-tier roundtrip")
+    a = sorted(f for f in os.listdir(pr) if f.startswith("vectors"))
+    b = sorted(f for f in os.listdir(po) if f.startswith("vectors"))
+    assert a == b
+    for x in a:
+        assert np.array_equal(np.load(os.path.join(pr, x)),
+                              np.load(os.path.join(po, x))), x
+
+
+def test_paged_store_rejects_truncated_blob(tmp_path):
+    pg = _grown_paged(True)
+    p = str(tmp_path / "idx")
+    save_paged_index(p, pg)
+    blob = sorted(f for f in os.listdir(p) if f.startswith("vectors"))[0]
+    path = os.path.join(p, blob)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(IndexStoreError):
+        IndexStore.open(p)
+
+
+def test_paged_store_rejects_leading_manifest_block(tmp_path):
+    """A paged block claiming MORE rows than the segments hold means the
+    metadata committed ahead of the data — never recoverable, reject."""
+    pg = _grown_paged(True)
+    p = str(tmp_path / "idx")
+    save_paged_index(p, pg)
+    mpath = os.path.join(p, "manifest.json")
+    man = json.load(open(mpath))
+    man["paged"]["extents"][0]["n"] += 1
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(IndexStoreError):
+        IndexStore.open(p)
+
+
+def test_paged_store_accepts_lagging_manifest_block(tmp_path):
+    """A paged block missing the newest extent is the crash window
+    (data committed, metadata not yet): reload reconstructs it."""
+    rng = np.random.default_rng(33)
+    Qm = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    pg = _grown_paged(True)
+    p = str(tmp_path / "idx")
+    save_paged_index(p, pg)
+    mpath = os.path.join(p, "manifest.json")
+    man = json.load(open(mpath))
+    man["paged"]["extents"] = man["paged"]["extents"][:-1]
+    json.dump(man, open(mpath, "w"))
+    pgl = PagedIndex.load(IndexStore.open(p))
+    _assert_same(pgl.search(Qm, 8), pg.search(Qm, 8), "lagging block")
+
+
+def test_paged_store_append_reload_bit_parity(tmp_path):
+    """Page-granular append -> save -> reload -> append: the reloaded
+    index continues bit-for-bit (cross-backend self-parity — the reload
+    must not perturb quantised bytes or extent scales)."""
+    rng = np.random.default_rng(34)
+    Qm = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    pg = _grown_paged(True)
+    p = str(tmp_path / "idx")
+    save_paged_index(p, pg)
+    pg2 = PagedIndex.load(IndexStore.open(p))
+    bl = rng.standard_normal((30, 24)).astype(np.float32)
+    a, b = pg.append(bl), pg2.append(bl)
+    _assert_same(a.search(Qm, 8), b.search(Qm, 8), "append after reload")
+    other = dataclasses.replace(b, backend="pallas")
+    _assert_same(b.search(Qm, 8), other.search(Qm, 8), "xbackend")
+
+
+def test_paged_store_empty_grown_index_roundtrip(tmp_path):
+    """An index grown purely from appends (0-row base) round-trips with
+    its open delta intact and keeps accepting appends."""
+    import types
+    rng = np.random.default_rng(35)
+    m = 24
+    Qm = jnp.asarray(rng.standard_normal((5, m)).astype(np.float32))
+    st0 = PagedIndexStorage.from_index(
+        types.SimpleNamespace(vectors=np.zeros((0, m), np.int8),
+                              scale=np.ones(m, np.float32)),
+        page_rows=32, seal_rows=96)
+    pg = PagedIndex(storage=st0)
+    pg = pg.append(rng.standard_normal((40, m)).astype(np.float32))
+    p = str(tmp_path / "idx")
+    save_paged_index(p, pg)
+    pgr = PagedIndex.load(IndexStore.open(p))
+    _assert_same(pgr.search(Qm, 8), pg.search(Qm, 8), "empty-grown")
+    assert pgr.storage.extents[0].kind == "delta"
+    assert not pgr.storage.extents[0].sealed
+    pgr.append(rng.standard_normal((20, m)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# maintenance: page-based telemetry, durable mirror, refit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", [False, True], ids=["f32", "int8"])
+def test_updater_paged_telemetry_and_mirror(tmp_path, quant):
+    rng = np.random.default_rng(40)
+    n, d = 600, 48
+    corpus = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    Qd = jnp.asarray(rng.standard_normal((4, d)).astype(np.float32))
+    sp = str(tmp_path / "store")
+    u = IndexUpdater.build(corpus, cutoff=0.5, quantize_int8=quant,
+                           store_path=sp, delta_capacity=96,
+                           paged=True, page_rows=32)
+    assert isinstance(u.index, PagedIndex)
+    assert u.delta_fraction == 0.0
+
+    def srch(upd):
+        W, mean = upd.pruner.projection()
+        return upd.index.search_projected(
+            Qd, jnp.asarray(W), k=6,
+            mean=None if mean is None else jnp.asarray(mean))
+
+    u.add_documents(jnp.asarray(
+        rng.standard_normal((50, d)).astype(np.float32)))
+    u.add_documents(jnp.asarray(
+        (rng.standard_normal((70, d)) * 5).astype(np.float32)))  # widens
+    # delta_fraction counts PAGES on a paged index, not rows
+    st = u.index.storage
+    assert u.delta_fraction == pytest.approx(st.delta_pages / st.n_slots)
+    # durable mirror auto-detects paged and reloads to the same bits
+    u2 = IndexUpdater.from_store(sp)
+    assert isinstance(u2.index, PagedIndex)
+    _assert_same(srch(u2), srch(u), "mirror reload")
+    # compaction telemetry reports pages moved/freed/host — not rows
+    assert u.health()["last_compaction"] is None
+    u.compact()
+    assert set(u.last_compaction) == {"pages_moved", "pages_freed",
+                                      "pages_host"}
+    assert u.compactions == 1 and u.delta_fraction == 0.0
+    assert all(e.kind == "base" for e in u.index.storage.extents)
+    # post-compact appends keep mirroring page-granularly
+    u.add_documents(jnp.asarray(
+        rng.standard_normal((40, d)).astype(np.float32)))
+    _assert_same(srch(IndexUpdater.from_store(sp)), srch(u),
+                 "post-compact append reload")
+    # refit rebuilds in place and stays paged
+    u.refit(corpus)
+    assert isinstance(u.index, PagedIndex)
+
+
+# ---------------------------------------------------------------------------
+# serving: promotion/compaction and eviction swaps under live traffic
+# ---------------------------------------------------------------------------
+
+
+def _unit_corpus(n, d=64, seed=77):
+    rng = np.random.default_rng(seed)
+    D = rng.standard_normal((n, d)).astype(np.float32)
+    D /= np.linalg.norm(D, axis=1, keepdims=True)
+    return D
+
+
+def test_paged_swap_soak_append_promote_compact():
+    """Live appends (sealing + promoting pages) plus a mid-soak compaction
+    while concurrent clients self-retrieve: every reply must answer its
+    own query — a dropped reply hangs its client, a half-swapped page
+    table misroutes ids."""
+    from repro.launch.serve import RetrievalServer
+    D = _unit_corpus(96)
+    extra = _unit_corpus(200, seed=78)
+    pruner = StaticPruner(cutoff=0.25).fit(jnp.asarray(D))
+    base = DenseIndex.build(pruner.prune_index(jnp.asarray(D)))
+    pg = PagedIndex.from_index(base, page_rows=32, seal_rows=64)
+    server = RetrievalServer(pg, pruner, k=1, max_batch=8, pipeline_depth=3)
+    up = IndexUpdater(pruner=pruner, index=pg, server=server)
+    try:
+        assert isinstance(up.index, PagedIndex)   # no segmented rewrap
+        up.add_documents(jnp.asarray(extra[:8]))
+        up.add_documents(jnp.asarray(0.5 * extra[:8]))
+        server.query(D[0])
+        swaps0 = server.swap_count
+        n_known = 96 + 8
+
+        stop = threading.Event()
+        failures: list = []
+
+        def appender():
+            i = 16
+            while not stop.is_set() and i + 8 <= len(extra):
+                up.add_documents(jnp.asarray(extra[i:i + 8]))
+                if i == 96:               # pointer-swap compaction mid-soak
+                    up.compact()
+                i += 8
+                stop.wait(0.002)
+
+        def client(cid):
+            rng = np.random.default_rng(cid)
+            try:
+                for _ in range(30):
+                    doc = int(rng.integers(0, n_known))
+                    q = D[doc] if doc < 96 else extra[doc - 96]
+                    _, ids = server.query(q, timeout=30.0)
+                    if int(ids[0]) != doc:
+                        failures.append((cid, doc, int(ids[0])))
+            except BaseException as e:    # noqa: BLE001
+                failures.append((cid, "exception", repr(e)))
+
+        app = threading.Thread(target=appender, daemon=True)
+        clients = [threading.Thread(target=client, args=(c,), daemon=True)
+                   for c in range(6)]
+        app.start()
+        for t in clients:
+            t.start()
+        for t in clients:
+            t.join(timeout=120.0)
+        stop.set()
+        app.join(timeout=60.0)
+        assert not failures, f"misrouted/dropped replies: {failures[:5]}"
+        assert server.swap_count > swaps0, "appends never swapped the index"
+        assert up.compactions >= 1
+        # every appended doc is retrievable through the server afterwards
+        n_final = up.index.n
+        for gid in (100, n_final - 1):
+            _, ids = server.query(extra[gid - 96])
+            assert int(ids[0]) == gid
+    finally:
+        server.close()
+
+
+def test_paged_eviction_swaps_under_live_traffic():
+    """Residency changes (evict to host tier / readmit) swapped into a
+    live server must never change results: clients self-retrieve while a
+    maintenance thread flips the same contents between fully resident and
+    oversubscribed."""
+    from repro.launch.serve import RetrievalServer
+    D = _unit_corpus(192)
+    pruner = StaticPruner(cutoff=0.25).fit(jnp.asarray(D))
+    base = DenseIndex.build(pruner.prune_index(jnp.asarray(D)))
+    resident = PagedIndex.from_index(base, page_rows=32, seal_rows=64)
+    evicted, nev = resident.evict(3)
+    assert nev == 3 and evicted.storage.n_host_pages == 3
+    server = RetrievalServer(resident, pruner, k=1, max_batch=8,
+                             pipeline_depth=3)
+    try:
+        server.query(D[0])
+        stop = threading.Event()
+        failures: list = []
+
+        def flipper():
+            flip = 0
+            while not stop.is_set():
+                server.swap_index((evicted, resident)[flip % 2])
+                flip += 1
+                stop.wait(0.001)
+
+        def client(cid):
+            rng = np.random.default_rng(1000 + cid)
+            try:
+                for _ in range(40):
+                    doc = int(rng.integers(0, len(D)))
+                    _, ids = server.query(D[doc], timeout=30.0)
+                    if int(ids[0]) != doc:
+                        failures.append((cid, doc, int(ids[0])))
+            except BaseException as e:    # noqa: BLE001
+                failures.append((cid, "exception", repr(e)))
+
+        fl = threading.Thread(target=flipper, daemon=True)
+        clients = [threading.Thread(target=client, args=(c,), daemon=True)
+                   for c in range(6)]
+        fl.start()
+        for t in clients:
+            t.start()
+        for t in clients:
+            t.join(timeout=120.0)
+        stop.set()
+        fl.join(timeout=30.0)
+        assert not failures, f"misrouted/dropped replies: {failures[:5]}"
+    finally:
+        server.close()
